@@ -1,0 +1,40 @@
+"""Paper Fig. 25: decode throughput (tokens/s) per platform from the pool
+tables, plus this repo's real host-CPU rANS decode throughput."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, real_kv
+from repro.core import entropy
+from repro.core.adaptive import TABLES
+from repro.core.codec import KVCodec
+from repro.core.quantization import quantize
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    # table-driven NVDEC pools: tokens/s = pool capacity / tokens per chunk
+    tokens_per_chunk = 10_000
+    for name in ("l20", "h20", "a100"):
+        t = TABLES[name]
+        lat = t.decode_latency("1080p", t.n_decoders)
+        tok_s = t.n_decoders * tokens_per_chunk / lat / 40  # 40 chunks/ctx
+        rows.append((f"decode_tput.{name}.tokens_per_s", lat * 1e6, tok_s))
+
+    # measured: this repo's real decode path (rANS + inverse prediction)
+    cfg, kv_k, _ = real_kv("lwm-7b", T=512)
+    q, _ = quantize(kv_k[:, :3])
+    codec = KVCodec(cfg.num_kv_heads, cfg.head_dim)
+    codec.search_layout(q[:128], "240p")
+    blob = codec.encode_chunk(q, "240p")
+    t0 = time.perf_counter()
+    codec.decode_chunk(blob)
+    dt = time.perf_counter() - t0
+    rows.append(("decode_tput.host_rans.tokens_per_s", dt * 1e6,
+                 512 / dt))
+    rows.append(("decode_tput.host_rans.bytes_per_s", dt * 1e6,
+                 q.nbytes / dt))
+    return rows

@@ -1,0 +1,30 @@
+"""rANS entropy-coder throughput + efficiency vs the Shannon bound (the
+host-side 'bitstream engine' of the TPU adaptation)."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row
+from repro.core import entropy
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    data = np.minimum(rng.geometric(0.25, 2_000_000) - 1, 255).astype(
+        np.uint8)
+    t0 = time.perf_counter()
+    blob = entropy.encode(data)
+    te = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = entropy.decode(blob)
+    td = time.perf_counter() - t0
+    assert np.array_equal(out, data)
+    bound = entropy.entropy_bits(data) / 8
+    rows.append(("entropy.encode_MBps", te * 1e6, data.nbytes / te / 1e6))
+    rows.append(("entropy.decode_MBps", td * 1e6, data.nbytes / td / 1e6))
+    rows.append(("entropy.efficiency_vs_shannon", 0.0, len(blob) / bound))
+    return rows

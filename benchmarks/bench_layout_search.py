@@ -1,0 +1,35 @@
+"""Paper Fig. 14: the intra-frame layout search — candidate count
+(O(log H x log D)), wall time, and gain over the identity layout."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, real_kv
+from repro.core.codec import KVCodec
+from repro.core.layout import intra_candidates
+from repro.core.quantization import quantize
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    for arch in ("lwm-7b", "yi-34b"):
+        cfg, kv_k, _ = real_kv(arch, T=256)
+        q, _ = quantize(kv_k[:, :3])
+        H, D = cfg.num_kv_heads, cfg.head_dim
+        n_cand = len(intra_candidates(H, D))
+        codec = KVCodec(H, D)
+        blob_id = codec.encode_chunk(q, "240p")
+        log: list = []
+        t0 = time.perf_counter()
+        best = codec.search_layout(q, "240p", log=log)
+        us = (time.perf_counter() - t0) * 1e6
+        blob_best = codec.encode_chunk(q, "240p")
+        rows.append((f"layout.{arch}.candidates", us, float(n_cand)))
+        rows.append((f"layout.{arch}.gain_over_identity", 0.0,
+                     len(blob_id) / len(blob_best)))
+        rows.append((f"layout.{arch}.best_hr_dr", 0.0,
+                     float(best.hr * 1000 + best.dr)))
+    return rows

@@ -1,0 +1,70 @@
+"""Paper Fig. 11/26 + Fig. 12: slicing-axis similarity analysis and
+multi-frame vs single-frame-stitch compression."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks.common import Row, real_kv
+from repro.core import entropy
+from repro.core.codec import KVCodec
+from repro.core.layout import (
+    IntraLayout, frame_geometry, layer_slice_frames, pack_frames,
+    token_stitched_single_frame,
+)
+from repro.core.prediction import predict_encode
+from repro.core.quantization import quantize
+
+
+def _ssim_like(a: np.ndarray, b: np.ndarray) -> float:
+    """Cosine-style structural similarity between consecutive slices."""
+    a = a.astype(np.float64).reshape(-1)
+    b = b.astype(np.float64).reshape(-1)
+    mu_a, mu_b = a.mean(), b.mean()
+    va, vb = a.var(), b.var()
+    cov = ((a - mu_a) * (b - mu_b)).mean()
+    c1, c2 = 0.01, 0.03
+    return float(((2 * mu_a * mu_b + c1) * (2 * cov + c2)) /
+                 ((mu_a ** 2 + mu_b ** 2 + c1) * (va + vb + c2)))
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    cfg, kv_k, _ = real_kv("lwm-7b", T=256)
+    q, _ = quantize(kv_k)  # [T, L, K, hd]
+    T, L, H, D = q.shape
+
+    # Fig. 11: similarity of adjacent slices along each axis
+    for axis, name in ((0, "token"), (2, "head"), (1, "layer")):
+        sl = np.moveaxis(q.astype(np.float32), axis, 0)
+        sims = [_ssim_like(sl[i], sl[i + 1])
+                for i in range(min(sl.shape[0] - 1, 32))]
+        rows.append((f"slicing.similarity.{name}", 0.0,
+                     float(np.mean(sims))))
+
+    # Fig. 11/12: coded size of token-dim slicing vs layer-dim slicing
+    q3 = q[:, :3]
+    lay = IntraLayout(H, D, H, 1)
+    geom = frame_geometry(T, lay, "240p")
+    t0 = time.perf_counter()
+    vid_tok = pack_frames(q3, lay, geom)
+    zres, _ = predict_encode(vid_tok)
+    tok_bits = entropy.entropy_bits(zres)
+    us = (time.perf_counter() - t0) * 1e6
+
+    vid_layer = layer_slice_frames(q)  # llm.265-style
+    zres_l, _ = predict_encode(vid_layer)
+    layer_bits = entropy.entropy_bits(zres_l) * (3 / L)  # same-data basis
+
+    rows.append(("slicing.token_vs_layer_size_ratio", us,
+                 layer_bits / max(tok_bits, 1.0)))
+
+    # Fig. 12: multi-frame placement vs single-frame stitching
+    stitched = token_stitched_single_frame(q3, lay)
+    zres_s, _ = predict_encode(stitched)
+    stitch_bits = entropy.entropy_bits(zres_s)
+    rows.append(("slicing.multiframe_vs_stitched_gain", 0.0,
+                 stitch_bits / max(tok_bits, 1.0)))
+    return rows

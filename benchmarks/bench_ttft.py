@@ -1,0 +1,57 @@
+"""Paper Fig. 18/21: TTFT across bandwidth x context for all methods.
+
+Compression ratios fed to the simulator are measured by
+bench_compression on real KV (conservative defaults used here so the
+bench stays fast; see EXPERIMENTS.md for the measured values)."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import Row
+from repro.configs import get_config
+from repro.core.adaptive import H20_TABLE
+from repro.cluster.network import BandwidthTrace
+from repro.cluster.simulator import (
+    ServingSimulator, cachegen_spec, full_prefill_spec, kvfetcher_spec,
+    llm265_spec, lmcache_raw_spec, raw_spec,
+)
+from repro.data.workload import fixed_context_trace
+from repro.serving.metrics import summarize
+
+CFG = get_config("yi-34b")
+RATIOS = {"240p": 9.0, "480p": 8.5, "640p": 8.0, "1080p": 7.0}
+
+
+def _ttft(spec, gbps: float, ctx: int) -> float:
+    sim = ServingSimulator(CFG, spec, chip="h20", n_chips=2,
+                           bandwidth=BandwidthTrace.constant(gbps),
+                           table=H20_TABLE)
+    res = sim.run(fixed_context_trace(ctx, n_requests=3, gap=90.0),
+                  max_new_tokens=8)
+    reqs = res.fetching() or res.requests
+    return summarize(reqs)["ttft_mean"]
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    methods = {
+        "full_prefill": full_prefill_spec(),
+        "lmcache_raw": lmcache_raw_spec(),
+        "raw": raw_spec(),
+        "cachegen": cachegen_spec(3.5),
+        "llm265": llm265_spec(5.0),
+        "kvfetcher": kvfetcher_spec(RATIOS),
+    }
+    for gbps in (2.0, 16.0, 40.0):
+        for ctx in (50_000, 150_000):
+            base = None
+            for name, spec in methods.items():
+                t = _ttft(spec, gbps, ctx)
+                if name == "cachegen":
+                    base = t
+                rows.append((f"ttft.{name}.bw{gbps:g}.ctx{ctx // 1000}k",
+                             t * 1e6, t))
+            ours = rows[-1][2]
+            rows.append((f"ttft.speedup_vs_cachegen.bw{gbps:g}"
+                         f".ctx{ctx // 1000}k", 0.0, base / ours))
+    return rows

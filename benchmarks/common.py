@@ -1,0 +1,48 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+Row = Tuple[str, float, float]  # (name, us_per_call, derived)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+           **kw) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args, **kw)
+        jax.block_until_ready(r) if _is_jax(r) else None
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args, **kw)
+        if _is_jax(r):
+            jax.block_until_ready(r)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _is_jax(x) -> bool:
+    return any(isinstance(l, jax.Array) for l in jax.tree.leaves(x))
+
+
+def real_kv(arch: str, T: int = 512, seed: int = 0):
+    """Real KV tensors [T, L, K, hd] from a reduced model of `arch`."""
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduce_config
+    from repro.data.pipeline import _zipf_tokens
+    from repro.models import transformer as tf
+    from repro.serving import paged_model
+    cfg = reduce_config(get_config(arch), num_layers=3)
+    params = tf.init_params(cfg, jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    tokens = _zipf_tokens(rng, cfg.vocab_size, (T,))
+    _, kvs = paged_model.prefill_collect_kv(params, cfg,
+                                            jnp.asarray(tokens[None]))
+    kv_k = np.stack([np.asarray(k[0]) for k, _ in kvs], axis=1)
+    kv_v = np.stack([np.asarray(v[0]) for _, v in kvs], axis=1)
+    return cfg, kv_k, kv_v

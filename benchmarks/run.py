@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--only <prefix>`` filters.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "bench_compression",
+    "bench_slicing",
+    "bench_layout_search",
+    "bench_entropy",
+    "bench_ttft",
+    "bench_adaptive",
+    "bench_nonreuse",
+    "bench_memory",
+    "bench_decode_throughput",
+    "bench_kernels",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod_name, repr(e)))
+            print(f"{mod_name}.FAILED,0,0  # {e!r}", flush=True)
+        print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

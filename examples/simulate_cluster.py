@@ -1,0 +1,54 @@
+"""Cluster-scale TTFT study (paper Figs. 18/19/21): discrete-event
+simulation of full-size models over bandwidth-limited networks, comparing
+KVFetcher against full prefill, raw reuse, CacheGen-, llm.265- and
+LMCache-style baselines. Compression ratios are measured with the real
+codec on real KV tensors before simulating.
+
+    PYTHONPATH=src python examples/simulate_cluster.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.adaptive import H20_TABLE
+from repro.cluster.network import BandwidthTrace
+from repro.cluster.simulator import (
+    ServingSimulator, cachegen_spec, full_prefill_spec, kvfetcher_spec,
+    llm265_spec, lmcache_raw_spec, raw_spec,
+)
+from repro.data.workload import fixed_context_trace
+from repro.serving.metrics import summarize
+
+CFG = get_config("yi-34b")
+# measured in benchmarks/bench_compression.py on real KV (see EXPERIMENTS.md)
+RATIOS = {"240p": 9.0, "480p": 8.5, "640p": 8.0, "1080p": 7.0}
+
+METHODS = [
+    ("full_prefill", full_prefill_spec()),
+    ("lmcache_raw", lmcache_raw_spec()),
+    ("raw (mooncake)", raw_spec()),
+    ("cachegen", cachegen_spec(3.5)),
+    ("llm.265", llm265_spec(5.0)),
+    ("kvfetcher", kvfetcher_spec(RATIOS)),
+]
+
+
+def main() -> None:
+    print(f"model {CFG.name} on 2x H20, context 100K, 16 Gbps")
+    print(f"{'method':>15} {'TTFT(s)':>9} {'poolUtil':>9} {'buf(MB)':>8}")
+    base = None
+    for name, spec in METHODS:
+        sim = ServingSimulator(CFG, spec, chip="h20", n_chips=2,
+                               bandwidth=BandwidthTrace.constant(16.0),
+                               table=H20_TABLE)
+        res = sim.run(fixed_context_trace(100_000, n_requests=3, gap=60.0),
+                      max_new_tokens=8)
+        reqs = res.fetching() or res.requests
+        t = summarize(reqs)["ttft_mean"]
+        base = base or t
+        print(f"{name:>15} {t:9.2f} {res.decode_pool_utilization:9.2f} "
+              f"{res.decompress_buffer_high_water / 1e6:8.1f}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

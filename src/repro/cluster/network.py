@@ -1,0 +1,62 @@
+"""Network model: piecewise-constant bandwidth traces with jitter.
+
+Transmission times integrate the trace exactly, so adaptive-resolution
+decisions see realistic partial-chunk bandwidth shifts (paper Fig. 17).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+GBPS = 1e9 / 8.0
+
+
+@dataclasses.dataclass
+class BandwidthTrace:
+    times: np.ndarray  # [n] segment start times, times[0] == 0
+    bps: np.ndarray  # [n] bytes/sec in each segment
+
+    @staticmethod
+    def constant(gbps: float) -> "BandwidthTrace":
+        return BandwidthTrace(np.array([0.0]), np.array([gbps * GBPS]))
+
+    @staticmethod
+    def steps(segs: Sequence[Tuple[float, float]]) -> "BandwidthTrace":
+        """segs: [(t_start, gbps), ...] with t_start ascending from 0."""
+        t = np.array([s[0] for s in segs], np.float64)
+        b = np.array([s[1] * GBPS for s in segs], np.float64)
+        assert t[0] == 0.0
+        return BandwidthTrace(t, b)
+
+    @staticmethod
+    def jittered(rng: np.random.Generator, base_gbps: float,
+                 duration: float, seg_len: float = 2.0,
+                 rel_std: float = 0.35,
+                 floor_frac: float = 0.25) -> "BandwidthTrace":
+        n = max(2, int(duration / seg_len) + 1)
+        mult = np.clip(rng.normal(1.0, rel_std, n), floor_frac, 2.5)
+        return BandwidthTrace(np.arange(n) * seg_len,
+                              base_gbps * GBPS * mult)
+
+    def bw_at(self, t: float) -> float:
+        i = int(np.searchsorted(self.times, t, side="right") - 1)
+        return float(self.bps[max(i, 0)])
+
+    def transmit(self, nbytes: float, t0: float) -> float:
+        """Finish time of an nbytes transfer starting at t0."""
+        remaining = float(nbytes)
+        t = t0
+        i = int(np.searchsorted(self.times, t0, side="right") - 1)
+        i = max(i, 0)
+        while True:
+            bw = float(self.bps[i])
+            seg_end = (float(self.times[i + 1])
+                       if i + 1 < len(self.times) else np.inf)
+            dt = remaining / bw
+            if t + dt <= seg_end:
+                return t + dt
+            remaining -= (seg_end - t) * bw
+            t = seg_end
+            i += 1

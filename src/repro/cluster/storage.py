@@ -1,0 +1,38 @@
+"""Remote KV storage node: holds encoded chunk manifests keyed by prefix.
+
+In production this is a dedicated storage server (LMCache-style) or a
+disaggregated pool (Mooncake-style); here it is an in-process store whose
+bytes are only reachable through the (simulated or live) network path.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.chunks import KVManifest, encode_prefix, prefix_key
+
+
+class KVStore:
+    def __init__(self) -> None:
+        self.manifests: Dict[str, KVManifest] = {}
+
+    def register(self, manifest: KVManifest) -> None:
+        self.manifests[manifest.prefix] = manifest
+
+    def register_prefix(self, token_ids: np.ndarray, kv_k: np.ndarray,
+                        kv_v: np.ndarray, **kw) -> KVManifest:
+        key = prefix_key(token_ids)
+        man = encode_prefix(kv_k, kv_v, prefix=key, **kw)
+        self.register(man)
+        return man
+
+    def lookup(self, prefix: str) -> Optional[KVManifest]:
+        return self.manifests.get(prefix)
+
+    def get_chunk(self, prefix: str, chunk_id: str, resolution: str) -> bytes:
+        return self.manifests[prefix].blobs[(chunk_id, resolution)]
+
+    def stored_bytes(self) -> int:
+        return sum(len(b) for m in self.manifests.values()
+                   for b in m.blobs.values())

@@ -1,0 +1,14 @@
+"""KVFetcher core: the paper's contribution (codec + efficient fetcher)."""
+from repro.core.codec import CodecOptions, KVCodec  # noqa: F401
+from repro.core.chunks import (  # noqa: F401
+    KVManifest, encode_prefix, decode_chunk_tokens,
+    encode_state_snapshot, decode_state_snapshot, prefix_key,
+)
+from repro.core.adaptive import (  # noqa: F401
+    TABLES, BandwidthEstimator, DecodeTable, select_resolution,
+)
+from repro.core.scheduler import (  # noqa: F401
+    FetchingAwareScheduler, ReqState, Request,
+)
+from repro.core.pipelining import max_admission_buffer, non_blocking_ok  # noqa: F401
+from repro.core.fetch import FetchPlan, build_plan  # noqa: F401

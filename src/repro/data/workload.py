@@ -1,0 +1,50 @@
+"""Workload generation: Poisson request traces with long-context prompts
+and a reuse threshold (paper §5.2: rate 0.2 req/s, >=40K-token prompts
+reuse remote KV), plus shared-prefix corpora for the live engine."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.scheduler import Request
+
+
+def poisson_trace(rng: np.random.Generator, *, n_requests: int = 20,
+                  rate: float = 0.2,
+                  prompt_lens: Sequence[int] = (20_000, 200_000),
+                  reuse_threshold: int = 40_000,
+                  suffix_tokens: int = 1_000,
+                  max_new_tokens: int = 32) -> List[Request]:
+    t = 0.0
+    out: List[Request] = []
+    for rid in range(n_requests):
+        t += rng.exponential(1.0 / rate)
+        plen = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        reuse = plen - suffix_tokens if plen >= reuse_threshold else 0
+        out.append(Request(rid=rid, arrival=t, prompt_len=plen,
+                           reuse_tokens=max(reuse, 0),
+                           prefix=f"pfx{rid}" if reuse else None,
+                           max_new_tokens=max_new_tokens))
+    return out
+
+
+def fixed_context_trace(context_len: int, *, n_requests: int = 4,
+                        gap: float = 30.0, suffix_tokens: int = 1_000,
+                        max_new_tokens: int = 32) -> List[Request]:
+    """Back-to-back fetching requests of one context length (Fig. 18/21)."""
+    return [Request(rid=i, arrival=i * gap, prompt_len=context_len,
+                    reuse_tokens=context_len - suffix_tokens,
+                    prefix=f"pfx{i}", max_new_tokens=max_new_tokens)
+            for i in range(n_requests)]
+
+
+def shared_prefix_tokens(rng: np.random.Generator, vocab: int,
+                         prefix_len: int, n_requests: int,
+                         suffix_len: int) -> tuple:
+    """(prefix, [full_prompt_i]) token arrays for the live engine."""
+    prefix = rng.integers(0, vocab, prefix_len)
+    prompts = [np.concatenate([prefix,
+                               rng.integers(0, vocab, suffix_len)])
+               for _ in range(n_requests)]
+    return prefix, prompts

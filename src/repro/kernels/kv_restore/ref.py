@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused KV restoration op.
+
+restore = dequantize(uint8 tokens) -> scatter into paged KV memory rows.
+This is the device-side half of frame-wise restoration (§3.3.2): the
+paper's ``Sparse_frame_KV_transfer`` writes each decoded frame's tokens
+straight into the engine's paged memory.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QOFF = 128
+
+
+def kv_restore_ref(pages, q_tokens, scales, slots):
+    """pages [R, H, D] float; q_tokens [n, H, D] uint8; scales [H] f32;
+    slots [n] int32 (row index into pages; -1 = drop).
+
+    Returns updated pages.
+    """
+    deq = (q_tokens.astype(jnp.float32) - QOFF) * scales[None, :, None]
+    deq = deq.astype(pages.dtype)
+    ok = slots >= 0
+    safe = jnp.where(ok, slots, 0)
+    deq = jnp.where(ok[:, None, None], deq,
+                    pages[safe])  # dropped rows rewrite their old value
+    return pages.at[safe].set(deq)

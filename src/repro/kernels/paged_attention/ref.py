@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged GQA decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _softmax(x):
+    m = x.max(axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
+    """q [B, H, hd]; k/v_pages [P, ps, K, hd]; block_tables [B, bps];
+    context_lens [B] -> out [B, H, hd]."""
+    B, H, hd = q.shape
+    P, ps, K, _ = k_pages.shape
+    bps = block_tables.shape[1]
+    g = H // K
+    # gather each sequence's pages -> [B, bps*ps, K, hd]
+    k = k_pages[block_tables].reshape(B, bps * ps, K, hd)
+    v = v_pages[block_tables].reshape(B, bps * ps, K, hd)
+    qg = q.reshape(B, K, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(hd))
+    pos = jnp.arange(bps * ps)[None]
+    logits = jnp.where((pos < context_lens[:, None])[:, None, None],
+                       logits, NEG_INF)
+    w = _softmax(logits)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)

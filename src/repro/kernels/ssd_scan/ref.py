@@ -1,0 +1,11 @@
+"""Oracle for the chunked SSD scan kernel: the pure-jnp implementation in
+repro.models.ssm (itself validated against step-by-step decode)."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_scan_ref(xdt, a_log, Bm, Cm, chunk: int = 128):
+    """xdt [b,s,nh,hd] (dt-folded); a_log [b,s,nh]; Bm/Cm [b,s,G,S].
+    Returns (y [b,s,nh,hd] f32, final_state [b,nh,hd,S] f32)."""
+    return ssd_chunked(xdt, a_log, Bm, Cm, chunk=chunk)

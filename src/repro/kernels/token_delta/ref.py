@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the token-delta (inter-frame) transform."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.prediction import UNZIGZAG, ZIGZAG
+
+_ZIG = jnp.asarray(ZIGZAG)
+_UNZIG = jnp.asarray(UNZIGZAG)
+
+
+def token_delta_encode_ref(video):
+    """video [F, H, W] uint8 -> zigzagged temporal residuals (frame 0 raw)."""
+    prev = jnp.concatenate(
+        [jnp.zeros_like(video[:1]), video[:-1]], axis=0)
+    res = video - prev  # uint8 wraparound
+    return _ZIG[res]
+
+
+def token_delta_decode_frame_ref(prev_frame, zres):
+    """prev [H, W] u8 (zeros for frame 0), zres [H, W] u8 -> frame u8."""
+    return prev_frame + _UNZIG[zres]

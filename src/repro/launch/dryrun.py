@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, record memory/cost analysis + collective bytes.
+
+The two lines above MUST stay the first statements in this file — jax
+locks the device count on first init, and only the dry-run is allowed to
+see 512 placeholder devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-9b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both]
+Results land in dryrun_results/<arch>.<shape>.<mesh>.json.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_dryrun, decode_overlay  # noqa: E402
+from repro.roofline.analysis import (  # noqa: E402
+    collective_bytes_from_hlo, hlo_bytes_split, roofline_report,
+)
+from repro.sharding import rules  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "dryrun_results")
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            out_dir: str = RESULTS_DIR, verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = cfg.shape_supported(shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "status": None}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _save(rec, out_dir)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    overlay = decode_overlay(cfg, shape, mesh)
+    t0 = time.time()
+    try:
+        with rules.activate(mesh, overlay=overlay):
+            recipe = build_dryrun(cfg, shape, mesh)
+            lowered = recipe.fn.lower(*recipe.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo_text = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo_text)
+            bsplit = hlo_bytes_split(hlo_text)
+        n_dev = mesh.devices.size
+        mem_rec = {
+            k: int(getattr(mem, k, 0) or 0)
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "alias_size_in_bytes",
+                      "generated_code_size_in_bytes")
+        } if mem is not None else {}
+        rec.update(
+            status="ok",
+            description=recipe.description,
+            n_devices=int(n_dev),
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops=float(cost.get("flops", 0.0)) if cost else 0.0,
+            bytes_accessed=float(cost.get("bytes accessed", 0.0))
+            if cost else 0.0,
+            memory=mem_rec,
+            collectives=coll,
+            roofline=roofline_report(cfg, shape, cost, coll, n_dev,
+                                     scan_trips=recipe.scan_trips,
+                                     bytes_split=bsplit),
+        )
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    rec["wall_s"] = round(time.time() - t0, 2)
+    _save(rec, out_dir)
+    if verbose:
+        state = rec["status"]
+        extra = (f" compile={rec.get('compile_s')}s "
+                 f"flops={rec.get('flops', 0):.3e}"
+                 if state == "ok" else rec.get("reason",
+                                               rec.get("error", "")))
+        print(f"[{state:>7}] {arch} x {shape_name} x {mesh_kind} {extra}",
+              flush=True)
+    return rec
+
+
+def _save(rec: dict, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{rec['arch']}.{rec['shape']}.{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    meshes = (["single", "multipod"] if args.mesh == "both"
+              else [args.mesh])
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or not args.shape)
+              else [args.shape])
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_one(arch, shape, mesh_kind, args.out)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production mesh construction (dry-run target: TPU v5e pods).
+
+A function, not a module-level constant, so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)}; "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_"
+            "count=512 before importing jax")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_debug_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over however many host devices exist (tests)."""
+    import jax
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

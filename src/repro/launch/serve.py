@@ -1,0 +1,67 @@
+"""Serving launcher: live engine (real compute) or cluster simulation.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch lwm-7b --live
+    PYTHONPATH=src python -m repro.launch.serve --arch yi-34b \
+        --simulate --gbps 16 --context 100000 --method kvfetcher
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lwm-7b")
+    ap.add_argument("--live", action="store_true")
+    ap.add_argument("--simulate", action="store_true")
+    ap.add_argument("--method", default="kvfetcher",
+                    choices=["kvfetcher", "cachegen", "llm265", "raw",
+                             "lmcache_raw", "full_prefill"])
+    ap.add_argument("--gbps", type=float, default=16.0)
+    ap.add_argument("--context", type=int, default=100_000)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--chip", default="h20",
+                    choices=["h20", "a100", "l20", "tpu-v5e"])
+    args = ap.parse_args()
+
+    if args.live or not args.simulate:
+        import runpy
+        import sys
+        sys.argv = ["serve_reuse.py"]
+        runpy.run_path("examples/serve_reuse.py", run_name="__main__")
+        return
+
+    from repro.configs import get_config
+    from repro.core.adaptive import TABLES
+    from repro.cluster.network import BandwidthTrace
+    from repro.cluster import simulator as sim
+    from repro.data.workload import fixed_context_trace
+    from repro.serving.metrics import summarize
+
+    spec = {
+        "kvfetcher": sim.kvfetcher_spec(
+            {"240p": 9.0, "480p": 8.5, "640p": 8.0, "1080p": 7.0}),
+        "cachegen": sim.cachegen_spec(3.5),
+        "llm265": sim.llm265_spec(5.0),
+        "raw": sim.raw_spec(),
+        "lmcache_raw": sim.lmcache_raw_spec(),
+        "full_prefill": sim.full_prefill_spec(),
+    }[args.method]
+    table = TABLES["h20" if args.chip == "tpu-v5e" else args.chip]
+    s = sim.ServingSimulator(
+        get_config(args.arch), spec, chip=args.chip
+        if args.chip != "tpu-v5e" else "h20", n_chips=2,
+        bandwidth=BandwidthTrace.constant(args.gbps), table=table)
+    res = s.run(fixed_context_trace(args.context,
+                                    n_requests=args.requests, gap=60.0),
+                max_new_tokens=16)
+    reqs = res.fetching() or res.requests
+    print(f"method={args.method} ctx={args.context} bw={args.gbps}Gbps")
+    for k, v in summarize(reqs).items():
+        print(f"  {k}: {v:.3f}")
+
+
+if __name__ == "__main__":
+    main()

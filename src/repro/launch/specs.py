@@ -1,0 +1,213 @@
+"""Abstract input specs + shardings for every (arch x input shape) pair.
+
+``build_dryrun`` returns a jit-able step function together with
+ShapeDtypeStruct stand-ins for all its inputs (weak-type-correct, no
+device allocation) and NamedShardings resolved through the logical-axis
+rule engine — the complete recipe ``dryrun.py`` lowers and compiles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as tf
+from repro.sharding import axes as ax
+from repro.sharding import rules
+from repro.training.optimizer import AdamW, constant_schedule
+from repro.training import steps as steps_mod
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder:
+        return {
+            "frame_embeds": _sds((B, S, cfg.d_model), dtype),
+            "labels": _sds((B, S), jnp.int32),
+            "mask": _sds((B, S), jnp.bool_),
+        }
+    if cfg.frontend == "vision":
+        n_text = S - cfg.num_patch_tokens
+        return {
+            "tokens": _sds((B, n_text), jnp.int32),
+            "labels": _sds((B, n_text), jnp.int32),
+            "patch_embeds": _sds((B, cfg.num_patch_tokens, cfg.d_model),
+                                 dtype),
+        }
+    return {"tokens": _sds((B, S), jnp.int32),
+            "labels": _sds((B, S), jnp.int32)}
+
+
+def prefill_arg_specs(cfg: ModelConfig, shape: InputShape,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.is_encoder:
+        return {"frame_embeds": _sds((B, S, cfg.d_model), dtype)}
+    if cfg.frontend == "vision":
+        return {"tokens": _sds((B, S - cfg.num_patch_tokens), jnp.int32),
+                "patch_embeds": _sds((B, cfg.num_patch_tokens, cfg.d_model),
+                                     dtype)}
+    return {"tokens": _sds((B, S), jnp.int32)}
+
+
+def _shardings_from_axes(axes_tree, shapes_tree, mesh):
+    return jax.tree.map(
+        lambda a, s: rules.named_sharding(a, s.shape, mesh),
+        axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) > 0 and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def decode_overlay(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    """Context/sequence-parallel overlays for decode shapes."""
+    overlay: dict = {}
+    model = mesh.shape.get("model", 1)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if shape.kind != "decode":
+        return overlay
+    if cfg.num_kv_heads and cfg.num_kv_heads % model != 0:
+        # KV heads can't shard over the model axis -> shard cache seq
+        overlay["cache_seq"] = [None, "model"]
+    if shape.global_batch == 1:
+        # batch-1 long-context: context parallelism over the data axes
+        cand = overlay.get("cache_seq", [None])[:1]
+        overlay["cache_seq"] = cand + [data_axes, "model"] \
+            if cand != [None] else [data_axes, "model"]
+        overlay["batch"] = []
+    return overlay
+
+
+@dataclasses.dataclass
+class DryrunRecipe:
+    fn: Any  # jitted function
+    args: Tuple  # ShapeDtypeStruct pytrees
+    description: str
+    scan_trips: int = 1  # layer-scan cycles x grad-accum microbatches
+
+
+def default_accum(cfg: ModelConfig, shape: InputShape, mesh) -> int:
+    data_ways = 1
+    for a in ("pod", "data"):
+        data_ways *= mesh.shape.get(a, 1)
+    local_batch = max(shape.global_batch // data_ways, 1)
+    if cfg.d_model >= 12288:
+        want = 16
+    elif cfg.d_model >= 6144:
+        want = 8
+    elif cfg.d_model >= 3840:
+        want = 4
+    else:
+        want = 1
+    return max(1, min(want, local_batch))
+
+
+def build_dryrun(cfg: ModelConfig, shape: InputShape, mesh, *,
+                 dtype=jnp.bfloat16,
+                 accum: Optional[int] = None,
+                 remat: bool = True) -> DryrunRecipe:
+    """Recipe for one (arch, input-shape, mesh) combination."""
+    key = jax.random.PRNGKey(0)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        accum = accum or default_accum(cfg, shape, mesh)
+        opt = AdamW(lr=constant_schedule(3e-4))
+        state_shapes = jax.eval_shape(
+            lambda k: steps_mod.init_state(cfg, opt, k, dtype), key)
+        p_axes = ax.param_axes(state_shapes.params)
+        state_sh = steps_mod.TrainState(
+            params=_shardings_from_axes(p_axes, state_shapes.params, mesh),
+            opt=type(state_shapes.opt)(
+                count=rules.named_sharding((), (), mesh),
+                m=_shardings_from_axes(p_axes, state_shapes.opt.m, mesh),
+                v=_shardings_from_axes(p_axes, state_shapes.opt.v, mesh)),
+            step=rules.named_sharding((), (), mesh))
+        batch_shapes = train_batch_specs(cfg, shape, dtype)
+        b_axes = ax.batch_axes(batch_shapes)
+        batch_sh = _shardings_from_axes(b_axes, batch_shapes, mesh)
+        fn = steps_mod.make_train_step(cfg, opt, accum_steps=accum,
+                                       remat=remat)
+        jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+        _, n_cycles, _ = tf.layer_plan(cfg)
+        return DryrunRecipe(jitted, (state_shapes, batch_shapes),
+                            f"train_step accum={accum}",
+                            scan_trips=max(n_cycles, 1) * accum)
+
+    params_shapes = jax.eval_shape(
+        lambda k: tf.init_params(cfg, k, dtype), key)
+    p_axes = ax.param_axes(params_shapes)
+    params_sh = _shardings_from_axes(p_axes, params_shapes, mesh)
+
+    if shape.kind == "prefill":
+        args = prefill_arg_specs(cfg, shape, dtype)
+        a_axes = ax.batch_axes(args)
+        args_sh = _shardings_from_axes(a_axes, args, mesh)
+
+        if cfg.is_encoder:
+            def fn(params, frame_embeds):
+                logits, _ = tf.forward_full(params, cfg,
+                                            embeds=frame_embeds)
+                return logits
+        elif cfg.frontend == "vision":
+            def fn(params, tokens, patch_embeds):
+                logits, cache = tf.prefill(params, cfg, tokens=tokens,
+                                           embeds=patch_embeds, dtype=dtype)
+                return logits, cache
+        else:
+            def fn(params, tokens):
+                logits, cache = tf.prefill(params, cfg, tokens=tokens,
+                                           dtype=dtype)
+                return logits, cache
+        order = [k for k in ("frame_embeds", "tokens", "patch_embeds")
+                 if k in args]  # matches each fn's positional signature
+        if cfg.is_encoder:
+            out_sh = None
+        else:
+            # constrain the returned cache's sharding (else XLA replicates
+            # the stacked KV output on every device)
+            cache_shapes = jax.eval_shape(
+                lambda: tf.init_cache(cfg, B, S, dtype))
+            cache_sh = _shardings_from_axes(ax.cache_axes(cache_shapes),
+                                            cache_shapes, mesh)
+            out_sh = (None, cache_sh)
+        jitted = jax.jit(fn, in_shardings=(params_sh,) +
+                         tuple(args_sh[k] for k in order),
+                         out_shardings=out_sh)
+        ordered = tuple(args[k] for k in order)
+        _, n_cycles, _ = tf.layer_plan(cfg)
+        return DryrunRecipe(jitted, (params_shapes,) + ordered,
+                            "prefill_step", scan_trips=max(n_cycles, 1))
+
+    # decode
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, B, S, dtype))
+    c_axes = ax.cache_axes(cache_shapes)
+    cache_sh = _shardings_from_axes(c_axes, cache_shapes, mesh)
+    token_spec = _sds((B,), jnp.int32)
+    pos_spec = _sds((), jnp.int32)
+    token_sh = rules.named_sharding(("batch",), (B,), mesh)
+    scalar_sh = rules.named_sharding((), (), mesh)
+
+    def fn(params, token, pos, cache):
+        return tf.decode_step(params, cfg, token, pos, cache)
+
+    jitted = jax.jit(fn, in_shardings=(params_sh, token_sh, scalar_sh,
+                                       cache_sh),
+                     out_shardings=(None, cache_sh),
+                     donate_argnums=(3,))
+    _, n_cycles, _ = tf.layer_plan(cfg)
+    return DryrunRecipe(jitted,
+                        (params_shapes, token_spec, pos_spec, cache_shapes),
+                        "serve_step (1 new token, cached context)",
+                        scan_trips=max(n_cycles, 1))

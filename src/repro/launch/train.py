@@ -1,0 +1,64 @@
+"""Training launcher.
+
+CPU smoke (runs real compute on a reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch yi-9b --smoke \
+        --steps 20
+Production shape (requires a real TPU mesh; on CPU use dryrun.py):
+    python -m repro.launch.train --arch nemotron-4-340b --shape train_4k
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import INPUT_SHAPES, get_config, reduce_config
+from repro.training.loop import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k",
+                    choices=list(INPUT_SHAPES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduce_config(cfg)
+        hist = train(cfg, steps=args.steps, batch_size=args.batch,
+                     seq_len=args.seq, lr=args.lr,
+                     accum_steps=args.accum, ckpt_path=args.ckpt)
+        print(f"final loss {hist[-1]['loss']:.4f}")
+        return
+
+    shape = INPUT_SHAPES[args.shape]
+    n_dev = len(jax.devices())
+    need = 256
+    if n_dev < need:
+        raise SystemExit(
+            f"production training of {cfg.name} at {shape.name} needs a "
+            f">=256-chip mesh ({n_dev} devices visible). Use --smoke for "
+            "local runs or `python -m repro.launch.dryrun` to verify the "
+            "distributed lowering.")
+    # on a real pod: reuse the dry-run recipe with concrete arrays
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_dryrun
+    from repro.sharding import rules
+    mesh = make_production_mesh()
+    with rules.activate(mesh):
+        recipe = build_dryrun(cfg, shape, mesh)
+        print(f"lowered {recipe.description}; materialize inputs and call "
+              "recipe.fn to train")
+
+
+if __name__ == "__main__":
+    main()

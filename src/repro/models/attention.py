@@ -1,0 +1,397 @@
+"""Attention: MHA/GQA/MQA, causal / bidirectional / sliding-window masks,
+full-sequence (train/prefill) and single-token (decode) paths, with a
+blocked (flash-style, online-softmax) implementation for long sequences.
+
+Shapes
+------
+x            [b, s, d_model]
+q            [b, s, H, hd]
+k, v         [b, s, K, hd]      (K = num_kv_heads)
+cache k/v    [b, S, K, hd]      (S = capacity; ring buffer when windowed)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, dense_init, shard_hint
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), d, dtype),
+        "wk": dense_init(ks[1], (d, K, hd), d, dtype),
+        "wv": dense_init(ks[2], (d, K, hd), d, dtype),
+        "wo": dense_init(ks[3], (H, hd, d), H * hd, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((K, hd), dtype)
+        p["bv"] = jnp.zeros((K, hd), dtype)
+    return p
+
+
+PARAM_AXES = {
+    "wq": ("embed", "heads", "head_dim"),
+    "wk": ("embed", "kv_heads", "head_dim"),
+    "wv": ("embed", "kv_heads", "head_dim"),
+    "wo": ("heads", "head_dim", "embed"),
+    "bq": ("heads", "head_dim"),
+    "bk": ("kv_heads", "head_dim"),
+    "bv": ("kv_heads", "head_dim"),
+}
+
+
+# ---------------------------------------------------------------------------
+# Masking helpers
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int) -> jax.Array:
+    """[..., q, k] additive bias. window==0 -> unwindowed."""
+    dif = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(dif.shape, bool)
+    if causal:
+        ok &= dif >= 0
+    if window > 0:
+        ok &= dif < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Core attention (full sequence)
+# ---------------------------------------------------------------------------
+
+def _attend_naive(q, k, v, q_pos, k_pos, *, causal, window):
+    b, s, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    qg = q.reshape(b, s, K, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    logits = logits + _mask_bias(q_pos, k_pos, causal=causal,
+                                 window=window)[:, None, None]
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, s, H, hd)
+
+
+def _attend_blocked(q, k, v, q_pos, k_pos, *, causal, window,
+                    block_q: int = 512, block_k: int = 1024):
+    """Flash-style online-softmax attention, O(block) memory.
+
+    Scans q blocks (outer) x kv blocks (inner). Padding handled by
+    position-mask (padded q rows produce garbage that is sliced away).
+    """
+    b, s, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    sk = k.shape[1]
+
+    nq = -(-s // block_q)
+    nk = -(-sk // block_k)
+    pq = nq * block_q - s
+    pk = nk * block_k - sk
+
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=2**30)
+
+    qp = qp.reshape(b, nq, block_q, K, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpos = qpos.reshape(b, nq, block_q).transpose(1, 0, 2)
+    kp = kp.reshape(b, nk, block_k, K, hd).transpose(1, 0, 2, 3, 4)
+    vp = vp.reshape(b, nk, block_k, K, hd).transpose(1, 0, 2, 3, 4)
+    kpos = kpos.reshape(b, nk, block_k).transpose(1, 0, 2)
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def q_step(_, qb):
+        qblk, qposb = qb  # [b, Bq, K, g, hd], [b, Bq]
+
+        def kv_step(carry, kb):
+            m, l, acc = carry
+            kblk, vblk, kposb = kb
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            bias = _mask_bias(qposb, kposb, causal=causal, window=window)
+            logits = logits + bias[:, None, None]
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, K, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, K, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, K, g, block_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (kp, vp, kpos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)  # [b, Bq, K, g, hd]
+
+    _, outs = jax.lax.scan(q_step, None, (qp, qpos))  # [nq, b, Bq, K, g, hd]
+    outs = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * block_q, H, hd)
+    return outs[:, :s].astype(q.dtype)
+
+
+def _attend_blocked_windowed(q, k, v, q_pos, k_pos, *, window: int,
+                             block_q: int = 512, block_k: int = 1024):
+    """Sliding-window attention with BLOCK SKIPPING: each q block visits
+    only the ~(window+block_q)/block_k KV blocks that can intersect its
+    window, instead of all of them — an O(s*window) algorithm rather than
+    O(s^2) with masking. Requires aligned q/k positions (prefill)."""
+    b, s, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    sk = k.shape[1]
+    nq = -(-s // block_q)
+    nk = -(-sk // block_k)
+    pq = nq * block_q - s
+    pk = nk * block_k - sk
+
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_pos, ((0, 0), (0, pq)), constant_values=-1)
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    kpos = jnp.pad(k_pos, ((0, 0), (0, pk)), constant_values=2**30)
+
+    qp = qp.reshape(b, nq, block_q, K, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    qpos = qpos.reshape(b, nq, block_q).transpose(1, 0, 2)
+    kpb = kp.reshape(b, nk, block_k, K, hd).transpose(1, 0, 2, 3, 4)
+    vpb = vp.reshape(b, nk, block_k, K, hd).transpose(1, 0, 2, 3, 4)
+    kposb = kpos.reshape(b, nk, block_k).transpose(1, 0, 2)
+
+    n_inner = (window + block_q) // block_k + 2
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+
+    def q_step(_, inp):
+        qi, qblk, qposb = inp
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            blk = (qi * block_q - window) // block_k + j
+            blk_c = jnp.clip(blk, 0, nk - 1)
+            ok_blk = (blk >= 0) & (blk <= nk - 1)
+            kblk = jax.lax.dynamic_index_in_dim(kpb, blk_c, 0, False)
+            vblk = jax.lax.dynamic_index_in_dim(vpb, blk_c, 0, False)
+            kpos_j = jax.lax.dynamic_index_in_dim(kposb, blk_c, 0, False)
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            bias = _mask_bias(qposb, kpos_j, causal=True, window=window)
+            bias = jnp.where(ok_blk, bias, NEG_INF)
+            logits = logits + bias[:, None, None]
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l2 = l * alpha + p.sum(axis=-1)
+            acc2 = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk)
+            return (m_new, l2, acc2), None
+
+        m0 = jnp.full((b, K, g, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, K, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, K, g, block_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(n_inner))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.transpose(0, 3, 1, 2, 4)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (jnp.arange(nq), qp, qpos))
+    outs = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * block_q, H, hd)
+    return outs[:, :s].astype(q.dtype)
+
+
+def attend(q, k, v, q_pos, k_pos, *, causal: bool, window: int,
+           blocked_threshold: int = 2048):
+    big = q.shape[1] * k.shape[1] > blocked_threshold ** 2
+    if big and causal and window > 0 and q.shape[1] == k.shape[1]:
+        # beyond-paper: O(s*window) block-skip SWA instead of O(s^2)+mask
+        return _attend_blocked_windowed(q, k, v, q_pos, k_pos,
+                                        window=window)
+    if big:
+        return _attend_blocked(q, k, v, q_pos, k_pos, causal=causal,
+                               window=window)
+    return _attend_naive(q, k, v, q_pos, k_pos, causal=causal, window=window)
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    capacity: int  # slots (== seq for full attn, window for SWA/local)
+    windowed: bool
+
+
+def cache_spec(cfg: ModelConfig, seq_len: int, *, local: bool) -> CacheSpec:
+    window = cfg.local_window if local else cfg.sliding_window
+    if window and window < seq_len:
+        return CacheSpec(window, True)
+    return CacheSpec(seq_len, False)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, spec: CacheSpec,
+                  dtype=jnp.float32) -> dict:
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    shape = (batch, spec.capacity, K, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+CACHE_AXES = {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+              "v": ("batch", "cache_seq", "kv_heads", "head_dim")}
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p: dict, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_hint(q, ("batch", "seq", "heads", "head_dim"))
+    k = shard_hint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = shard_hint(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def attention_full(p: dict, x, cfg: ModelConfig, positions, *,
+                   window: int, causal: bool) -> jax.Array:
+    """Train / no-cache forward over a full sequence."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = attend(q, k, v, positions, positions, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_prefill(p: dict, x, cfg: ModelConfig, positions, cache: dict,
+                      spec: CacheSpec, *, causal: bool = True
+                      ) -> Tuple[jax.Array, dict]:
+    """Full-seq forward that also fills the KV cache (ring when windowed)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    window = spec.capacity if spec.windowed else 0
+    out = attend(q, k, v, positions, positions, causal=causal, window=window)
+    s = x.shape[1]
+    if spec.windowed and s > spec.capacity:
+        # only the trailing window lands in the ring buffer
+        kt = k[:, -spec.capacity:]
+        vt = v[:, -spec.capacity:]
+        tpos = positions[:, -spec.capacity:]
+        slots = tpos % spec.capacity
+        # scatter rows into ring slots
+        bidx = jnp.arange(kt.shape[0])[:, None]
+        new_k = cache["k"].at[bidx, slots].set(kt)
+        new_v = cache["v"].at[bidx, slots].set(vt)
+    else:
+        new_k = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    new_k = shard_hint(new_k, CACHE_AXES["k"])
+    new_v = shard_hint(new_v, CACHE_AXES["v"])
+    return (jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+            {"k": new_k, "v": new_v})
+
+
+def attention_decode_token(p: dict, x, cfg: ModelConfig, pos, cache: dict,
+                           spec: CacheSpec) -> Tuple[jax.Array, dict]:
+    """Decode WITHOUT rewriting the cache: attends over the (stale) cache
+    plus the new token's K/V computed on the fly, and returns the token
+    K/V for the caller to write with one stacked dynamic-update-slice
+    outside the layer scan. This keeps the scan's carried/stacked state to
+    O(tokens) instead of O(cache), which otherwise costs whole-cache
+    copies and hoisted dtype-converts per step.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    g = cfg.num_heads // K
+    qg = q.reshape(b, K, g, hd)
+    ck, cv = cache["k"], cache["v"]
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, ck,
+                        preferred_element_type=jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    logits = logits * scale
+    slot = (pos % spec.capacity) if spec.windowed else pos
+    idx = jnp.arange(spec.capacity)
+    valid = idx <= pos - 1
+    if spec.windowed:
+        valid = valid | (pos >= spec.capacity)
+    valid = valid & (idx != slot)  # the new token replaces this slot
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    # pin the seq-sharded contraction: weights stay sharded like the cache
+    # seq dim and the PV dot reduces to a tiny [b, K, g, hd] all-reduce —
+    # otherwise GSPMD reshards (all-gathers) the whole V cache per layer
+    logits = shard_hint(logits, ("batch", "kv_heads", None, "cache_seq"))
+    logits_new = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(ck.dtype),
+                            preferred_element_type=jnp.float32) * scale
+    m = jnp.maximum(logits.max(-1, keepdims=True),
+                    logits_new.max(-1, keepdims=True))
+    p_cache = jnp.exp(logits - m)
+    p_new = jnp.exp(logits_new - m)
+    denom = p_cache.sum(-1, keepdims=True) + p_new.sum(-1, keepdims=True)
+    w_cache = (p_cache / denom).astype(cv.dtype)
+    w_cache = shard_hint(w_cache, ("batch", "kv_heads", None, "cache_seq"))
+    w_new = (p_new / denom).astype(cv.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w_cache, cv)
+    out = shard_hint(out, ("batch", None, None, None))
+    out = out + w_new * v.reshape(b, K, 1, hd).astype(cv.dtype)
+    out = out.reshape(b, 1, cfg.num_heads, hd)
+    return (jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+            {"k_tok": k.astype(ck.dtype), "v_tok": v.astype(cv.dtype)})
+
+
+def attention_decode(p: dict, x, cfg: ModelConfig, pos, cache: dict,
+                     spec: CacheSpec) -> Tuple[jax.Array, dict]:
+    """Single-token decode. x [b, 1, d]; pos scalar int (same for batch)."""
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    slot = (pos % spec.capacity) if spec.windowed else pos
+    ck = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    ck = shard_hint(ck, CACHE_AXES["k"])
+    cv = shard_hint(cv, CACHE_AXES["v"])
+
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    g = cfg.num_heads // K
+    qg = q.reshape(b, K, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, ck,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    # validity: slot i holds a token iff i <= pos (unwindowed) or always
+    # once the ring is full (windowed); ring slots hold positions in
+    # (pos-capacity, pos] by construction, all attendable under the window.
+    idx = jnp.arange(spec.capacity)
+    valid = idx <= pos  # before ring wraps, slots > pos are empty
+    if spec.windowed:
+        valid = valid | (pos >= spec.capacity)
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, cv).reshape(b, 1, cfg.num_heads, hd)
+    return (jnp.einsum("bshk,hkd->bsd", out, p["wo"]),
+            {"k": ck, "v": cv})

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU, squared-ReLU (Nemotron), GELU (HuBERT)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, shard_hint, squared_relu
+
+
+def init_mlp(kind: str, d_model: int, d_ff: int, key,
+             dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    if kind == "swiglu":
+        return {"wi": dense_init(k1, (d_model, 2, d_ff), d_model, dtype),
+                "wo": dense_init(k2, (d_ff, d_model), d_ff, dtype)}
+    return {"wi": dense_init(k1, (d_model, d_ff), d_model, dtype),
+            "wo": dense_init(k2, (d_ff, d_model), d_ff, dtype)}
+
+
+def mlp_param_axes(kind: str) -> dict:
+    if kind == "swiglu":
+        return {"wi": ("embed", None, "mlp"), "wo": ("mlp", "embed")}
+    return {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+
+
+def apply_mlp(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jnp.einsum("bsd,dcf->bscf", x, p["wi"])
+        h = shard_hint(h, ("batch", "seq", None, "mlp"))
+        h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+        h = shard_hint(h, ("batch", "seq", "mlp"))
+        h = squared_relu(h) if kind == "squared_relu" else jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])

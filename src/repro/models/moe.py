@@ -1,0 +1,162 @@
+"""Mixture-of-Experts layer: top-k routing with fixed expert capacity
+(gather/scatter dispatch, no giant one-hot dispatch tensors), optional
+shared experts (DeepSeekMoE), switch-style load-balance aux loss.
+
+Dispatch strategy
+-----------------
+Tokens are processed in groups (the batch dim). Per group:
+  1. router logits -> top-k experts + renormalized weights per token
+  2. position-in-expert via cumsum over the flattened (token, choice)
+     assignment list; tokens beyond capacity C are dropped (their weight
+     mass is simply not added back -> standard capacity dropping)
+  3. an [E, C] table of token ids is built by scatter, token vectors are
+     gathered to [E, C, d], experts run as one batched einsum, and results
+     are scatter-added back weighted by the routing weights.
+
+Compute is E*C*ffn = k*capacity_factor overhead over ideal, matching
+production dropping MoE implementations, and the expert dim shards over the
+"model" mesh axis (all-to-all appears in the lowered HLO).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, shard_hint
+from repro.models.mlp import apply_mlp, init_mlp
+
+
+def init_moe(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, E), d, jnp.float32),
+        "wi": (dense_init(ks[1], (E, d, 2, ff), d, dtype)
+               if cfg.mlp_kind == "swiglu" else
+               dense_init(ks[1], (E, d, ff), d, dtype)),
+        "wo": dense_init(ks[2], (E, ff, d), ff, dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(cfg.mlp_kind, d,
+                               cfg.num_shared_experts * ff, ks[3], dtype)
+    return p
+
+
+def moe_param_axes(cfg: ModelConfig) -> dict:
+    swiglu = cfg.mlp_kind == "swiglu"
+    axes = {
+        "router": ("embed", "experts"),
+        "wi": (("experts", "embed", None, "mlp") if swiglu
+               else ("experts", "embed", "mlp")),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    if cfg.num_shared_experts:
+        from repro.models.mlp import mlp_param_axes
+        axes["shared"] = mlp_param_axes(cfg.mlp_kind)
+    return axes
+
+
+def _expert_ffn(p: dict, xe: jax.Array, kind: str) -> jax.Array:
+    """xe [G, E, C, d] -> [G, E, C, d], batched over groups and experts.
+
+    The hidden dim shards over "mlp" (model axis) so each device computes
+    its ff-slice locally from its group-shard of xe — no dispatched-
+    activation all-gather. The wo contraction produces partial sums that
+    GSPMD reduces once per layer.
+    """
+    if kind == "swiglu":
+        h = jnp.einsum("gecd,edif->gecif", xe, p["wi"])
+        h = shard_hint(h, ("batch", "experts", "expert_cap", None, "mlp"))
+        h = jax.nn.silu(h[..., 0, :]) * h[..., 1, :]
+    else:
+        h = jnp.einsum("gecd,edf->gecf", xe, p["wi"])
+        h = shard_hint(h, ("batch", "experts", "expert_cap", "mlp"))
+        h = jax.nn.relu(h) ** 2 if kind == "squared_relu" else jax.nn.gelu(h)
+    return jnp.einsum("gecf,efd->gecd", h, p["wo"])
+
+
+def _route_tables(tope, topw, s: int, E: int, cap: int, dtype):
+    """Per-group routing tables (integers only — cheap to build/replicate).
+
+    tope/topw [s, k] -> (table [E, cap] token ids (s = pad),
+                         wtab [E, cap] combine weights)."""
+    k = tope.shape[-1]
+    flat_e = tope.reshape(-1)  # [s*k], token-major
+    tok_ids = jnp.repeat(jnp.arange(s), k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # position-in-expert
+    myk = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    ok = myk < cap
+    safe_e = jnp.where(ok, flat_e, 0)
+    safe_p = jnp.where(ok, myk, cap)  # cap column = dropped sentinel
+    table = jnp.full((E, cap + 1), s, jnp.int32)
+    table = table.at[safe_e, safe_p].set(jnp.where(ok, tok_ids, s))
+    wtab = jnp.zeros((E, cap + 1), dtype)
+    wtab = wtab.at[safe_e, safe_p].set(
+        jnp.where(ok, topw.reshape(-1), 0.0).astype(dtype))
+    return table[:, :cap], wtab[:, :cap]
+
+
+def apply_moe(p: dict, x: jax.Array, cfg: ModelConfig,
+              capacity_factor: float = 0.0
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x [b, s, d] -> (out [b, s, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    cf = capacity_factor or cfg.moe_capacity_factor
+    cap = max(1, int(s * k * cf / E))
+
+    # cast the fp32 router weight down rather than the (huge) activation up;
+    # accumulate in fp32 via preferred_element_type
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [b, s, E]
+    topw, tope = jax.lax.top_k(probs, k)  # [b, s, k]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (switch-style)
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(tope, E, dtype=jnp.float32), axis=(1, 2))  # [b, E]
+    prob_frac = jnp.mean(probs, axis=1)  # [b, E]
+    aux = E * jnp.mean(jnp.sum(dispatch_frac * prob_frac, axis=-1))
+
+    # routing tables: vmapped int scatters (tiny); the token-vector
+    # gathers are batched over the (data-sharded) group axis -> local
+    tables, wtabs = jax.vmap(
+        lambda te, tw: _route_tables(te, tw, s, E, cap, x.dtype)
+    )(tope, topw)  # [b, E, cap] each
+    # per-(token, choice) slot in the dispatched tensor, for the combine
+    # gather below; dropped tokens point at the zero sentinel slot E*cap
+    flat_e = tope.reshape(b, s * k)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [b, s*k, E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    myk = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    slot = jnp.where(myk < cap, flat_e * cap + myk, E * cap)  # [b, s*k]
+
+    xpad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        xpad[:, :, None, :],  # [b, s+1, 1, d]
+        tables.reshape(b, E * cap)[:, :, None, None], axis=1
+    ).reshape(b, E, cap, d)
+    xe = shard_hint(xe, ("batch", "experts", "expert_cap", None))
+    ye = _expert_ffn(p, xe, cfg.mlp_kind)
+    ye = shard_hint(ye, ("batch", "experts", "expert_cap", None))
+
+    # combine as a batched GATHER (not scatter-add): out[t] =
+    # sum_k w_tk * ye[slot(t, k)] — identical math, but gathers partition
+    # cleanly under GSPMD while scatter-adds force giant all-reduces.
+    ye_flat = jnp.concatenate(
+        [ye.reshape(b, E * cap, d),
+         jnp.zeros((b, 1, d), ye.dtype)], axis=1)  # sentinel zero row
+    picked = jnp.take_along_axis(
+        ye_flat[:, :, None, :], slot[:, :, None, None], axis=1
+    ).reshape(b, s, k, d)
+    w = jnp.where(myk < cap, topw.reshape(b, s * k), 0.0).reshape(b, s, k)
+    out = jnp.einsum("bskd,bsk->bsd", picked, w.astype(picked.dtype))
+    out = shard_hint(out, ("batch", "seq", None))
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], x, cfg.mlp_kind)
+    return out, aux

@@ -1,0 +1,123 @@
+"""Griffin / RecurrentGemma recurrent block with RG-LRU [arXiv:2402.19427].
+
+Block:  x -> (W_x -> causal conv1d -> RG-LRU) * gelu(W_g x) -> W_o
+RG-LRU: r_t = sigmoid(W_a u_t);  i_t = sigmoid(W_i u_t)
+        log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+        h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Full-sequence path uses an associative scan (O(log s) depth); decode is a
+single recurrence step.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, shard_hint
+
+_C = 8.0
+
+
+def init_rglru(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, w), d, dtype),
+        "w_gate": dense_init(ks[1], (d, w), d, dtype),
+        "conv": dense_init(ks[2], (4, w), 4, dtype),
+        "w_a": dense_init(ks[3], (w, w), w, dtype),
+        "w_i": dense_init(ks[4], (w, w), w, dtype),
+        "lam": jnp.full((w,), 0.65, jnp.float32),  # softplus^-1-ish init
+        "w_out": dense_init(ks[5], (w, d), w, dtype),
+    }
+
+
+RGLRU_PARAM_AXES = {
+    "w_x": ("embed", "rglru_width"),
+    "w_gate": ("embed", "rglru_width"),
+    "conv": ("conv_k", "rglru_width"),
+    "w_a": ("embed", "rglru_width"),
+    "w_i": ("embed", "rglru_width"),
+    "lam": ("rglru_width",),
+    "w_out": ("rglru_width", "embed"),
+}
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, 3, w), dtype)}
+
+
+RGLRU_CACHE_AXES = {"h": ("batch", "rglru_width"),
+                    "conv": ("batch", "conv_k", "rglru_width")}
+
+
+def linear_scan(a: jax.Array, b: jax.Array, h0: Optional[jax.Array] = None
+                ) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t along axis 1; returns all h_t.
+
+    Implemented with jax.lax.associative_scan over (a, b) pairs.
+    """
+    if h0 is not None:
+        # fold h0 into the first step
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def _gates(p: dict, u: jax.Array):
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wk->bsk", u, p["w_a"])
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wk->bsk", u, p["w_i"])
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * u.astype(jnp.float32))
+    return a, gated_in
+
+
+def apply_rglru_full(p: dict, x: jax.Array, cfg: ModelConfig,
+                     with_cache: bool) -> Tuple[jax.Array, Optional[dict]]:
+    """x [b, s, d]; full-sequence recurrence via associative scan."""
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    u = shard_hint(u, ("batch", "seq", "rglru_width"))
+    # causal depthwise conv, width 4
+    w = p["conv"].shape[0]
+    prev = jnp.zeros((u.shape[0], w - 1, u.shape[-1]), u.dtype)
+    full = jnp.concatenate([prev, u], axis=1)
+    u = sum(full[:, i:i + x.shape[1]] * p["conv"][i] for i in range(w))
+    conv_state = full[:, -(w - 1):] if with_cache else None
+
+    a, gated_in = _gates(p, u)
+    h = linear_scan(a, gated_in)  # [b, s, w] fp32
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    out = jnp.einsum("bsw,wd->bsd", (h.astype(x.dtype) * gate), p["w_out"])
+    if with_cache:
+        return out, {"h": h[:, -1], "conv": conv_state}
+    return out, None
+
+
+def apply_rglru_decode(p: dict, x: jax.Array, cfg: ModelConfig,
+                       cache: dict) -> Tuple[jax.Array, dict]:
+    """x [b, 1, d] single-step recurrence."""
+    u = jnp.einsum("bsd,dw->bsw", x, p["w_x"])  # [b,1,w]
+    hist = jnp.concatenate([cache["conv"], u], axis=1)  # [b, 4, w]
+    u = jnp.einsum("bwk,wk->bk", hist, p["conv"])[:, None]  # [b,1,w]
+    new_conv = hist[:, 1:]
+    a, gated_in = _gates(p, u)  # [b,1,w]
+    h = a[:, 0] * cache["h"] + gated_in[:, 0]  # [b, w]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))[:, 0]
+    out = jnp.einsum("bw,wd->bd", h.astype(x.dtype) * gate, p["w_out"])
+    return out[:, None], {"h": h, "conv": new_conv}

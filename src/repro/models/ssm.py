@@ -1,0 +1,238 @@
+"""Mamba2 (SSD — state-space duality) block [arXiv:2405.21060].
+
+Pure-JAX chunked SSD for train/prefill (matmul-rich: maps onto the MXU),
+O(1)-state single-token decode. A Pallas kernel version of the chunked scan
+lives in repro.kernels.ssd_scan.
+
+Block dataflow (norm handled by the caller):
+  in_proj -> [z | xBC | dt]; causal depthwise conv + silu over xBC;
+  split xBC -> x, B, C;  dt = softplus(dt + bias);
+  h_t = exp(dt_t A) h_{t-1} + dt_t * B_t (x)  (outer product per head)
+  y_t = C_t . h_t + D * x_t
+  out = out_proj( rmsnorm(y * silu(z)) )
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, rms_norm, shard_hint
+
+
+def init_ssm(cfg: ModelConfig, key, dtype=jnp.float32) -> dict:
+    d, din = cfg.d_model, cfg.d_inner
+    G, S, nh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    convdim = din + 2 * G * S
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * din + 2 * G * S + nh), d, dtype),
+        "conv": dense_init(ks[1], (cfg.ssm_conv, convdim), cfg.ssm_conv,
+                           dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.zeros((din,), dtype),
+        "w_out": dense_init(ks[2], (din, d), din, dtype),
+    }
+
+
+SSM_PARAM_AXES = {
+    "w_in": ("embed", "ssm_inner"),
+    "conv": ("conv_k", "ssm_inner"),
+    "A_log": ("ssm_heads",),
+    "D": ("ssm_heads",),
+    "dt_bias": ("ssm_heads",),
+    "norm_w": ("ssm_inner",),
+    "w_out": ("ssm_inner", "embed"),
+}
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    nh, hd, S = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+    convdim = cfg.d_inner + 2 * cfg.ssm_ngroups * S
+    return {
+        "state": jnp.zeros((batch, nh, hd, S), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, convdim), dtype),
+    }
+
+
+SSM_CACHE_AXES = {
+    "state": ("batch", "ssm_heads", None, "ssm_state"),
+    "conv": ("batch", "conv_k", "ssm_inner"),
+}
+
+
+def _split_in(p: dict, x, cfg: ModelConfig):
+    din, G, S, nh = (cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state,
+                     cfg.ssm_nheads)
+    proj = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z = proj[..., :din]
+    xBC = proj[..., din:2 * din + 2 * G * S]
+    dt = proj[..., 2 * din + 2 * G * S:]
+    return z, xBC, dt
+
+
+def _conv_full(p: dict, xBC, prev: Optional[jax.Array]):
+    """Causal depthwise conv over seq. prev: [b, w-1, convdim] history."""
+    w = p["conv"].shape[0]
+    if prev is None:
+        prev = jnp.zeros((xBC.shape[0], w - 1, xBC.shape[-1]), xBC.dtype)
+    full = jnp.concatenate([prev, xBC], axis=1)
+    out = sum(full[:, i:i + xBC.shape[1]] * p["conv"][i]
+              for i in range(w))
+    return jax.nn.silu(out), full[:, -(w - 1):]
+
+
+def _segsum(a_log: jax.Array) -> jax.Array:
+    """a_log [..., q] -> [..., q, q] lower-tri cumulative log-decay."""
+    q = a_log.shape[-1]
+    cs = jnp.cumsum(a_log, axis=-1)
+    # decay from j+1..i inclusive = cs[i] - cs[j]; strictly lower + diag 0
+    dif = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, dif, -jnp.inf)
+
+
+def ssd_chunked(xh, a_log, Bm, Cm, init_state=None, chunk: int = 128):
+    """Chunked SSD.
+
+    xh     [b, s, nh, hd]   (already multiplied by dt)
+    a_log  [b, s, nh]       log decay per step (dt * A, negative)
+    Bm, Cm [b, s, G, S]     (G broadcast over heads)
+    returns y [b, s, nh, hd], final_state [b, nh, hd, S]
+    """
+    b, s, nh, hd = xh.shape
+    G, S = Bm.shape[2], Bm.shape[3]
+    assert nh % G == 0
+    q = min(chunk, s)
+    hpg = nh // G
+    orig_s = s
+    if s % q:  # pad to a chunk multiple; a_log=0, x=0 leaves state intact
+        pad = q - s % q
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    c = s // q
+
+    # large intra-chunk intermediates ([b,c,nh,q,q]) follow the input
+    # dtype (bf16 in the production configs) — decay math stays fp32
+    cdtype = xh.dtype
+    xc = xh.reshape(b, c, q, nh, hd)
+    ac = a_log.reshape(b, c, q, nh).astype(jnp.float32)
+    Bc = Bm.reshape(b, c, q, G, S).astype(cdtype)
+    Cc = Cm.reshape(b, c, q, G, S).astype(cdtype)
+
+    acs = jnp.cumsum(ac, axis=2)  # [b,c,q,nh]
+    # intra-chunk (diagonal) term
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2))).astype(cdtype)
+    scores = jnp.einsum("bcqgn,bckgn->bcgqk", Cc, Bc)  # [b,c,G,q,q]
+    scores = jnp.repeat(scores, hpg, axis=2)  # [b,c,nh,q,q]
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", L * scores, xc,
+                        preferred_element_type=jnp.float32)
+
+    # per-chunk end states: input at t decays by exp(sum_{t+1..end} a)
+    decay_to_end = jnp.exp(acs[:, :, -1:, :] - acs).astype(cdtype)
+    Bh = jnp.repeat(Bc, hpg, axis=3)  # [b,c,q,nh,S]
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn",
+                        Bh, decay_to_end, xc,
+                        preferred_element_type=jnp.float32)
+    y, final = _ssd_inter(y_diag, states, acs, Cc, xc, init_state, hpg)
+    return y[:, :orig_s], final
+
+
+def _ssd_inter(y_diag, states, acs, Cc, xc, init_state, hpg):
+    b, c, q, nh = acs.shape
+    hd = xc.shape[-1]
+    S = Cc.shape[-1]
+    chunk_decay = jnp.exp(acs[:, :, -1, :])  # [b,c,nh]
+
+    def step(h, inp):
+        st, dec = inp  # st [b,nh,hd,S], dec [b,nh]
+        h_prev = h
+        h = h * dec[..., None, None] + st
+        return h, h_prev
+
+    if init_state is None:
+        init_state = jnp.zeros((b, nh, hd, S), jnp.float32)
+    # scan over chunks
+    states_t = states.transpose(1, 0, 2, 3, 4)  # [c,b,nh,hd,S]
+    decay_t = chunk_decay.transpose(1, 0, 2)  # [c,b,nh]
+    final, h_prevs = jax.lax.scan(step, init_state, (states_t, decay_t))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)  # [b,c,nh,hd,S]
+
+    # inter-chunk contribution: y_off[t] = C_t . (decay(0..t) * h_chunk_start)
+    in_decay = jnp.exp(acs)  # decay from chunk start to t inclusive
+    Ch = jnp.repeat(Cc, hpg, axis=3) if Cc.shape[3] != nh else Cc
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch,
+                       h_prevs.astype(Ch.dtype),
+                       in_decay.astype(jnp.float32).astype(Ch.dtype),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag.astype(jnp.float32) + y_off).reshape(b, c * q, nh, hd)
+    return y, final
+
+
+def apply_ssm_full(p: dict, x, cfg: ModelConfig,
+                   with_cache: bool) -> Tuple[jax.Array, Optional[dict]]:
+    """Train (with_cache=False) or prefill (True) over a full sequence."""
+    b, s, _ = x.shape
+    G, S, nh, hd = (cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads,
+                    cfg.ssm_head_dim)
+    z, xBC, dt = _split_in(p, x, cfg)
+    xBC, conv_state = _conv_full(p, xBC, None)
+    xin = xBC[..., :cfg.d_inner]
+    Bm = xBC[..., cfg.d_inner:cfg.d_inner + G * S].reshape(b, s, G, S)
+    Cm = xBC[..., cfg.d_inner + G * S:].reshape(b, s, G, S)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [b,s,nh]
+    A = -jnp.exp(p["A_log"])
+    a_log = dt * A  # [b, s, nh]
+    xh = xin.reshape(b, s, nh, hd)
+    xh = shard_hint(xh, ("batch", "seq", "ssm_heads", None))
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(xh.dtype)
+    y, final = ssd_chunked(xdt, a_log, Bm, Cm, chunk=64)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    if with_cache:
+        return out, {"state": final, "conv": conv_state}
+    return out, None
+
+
+def apply_ssm_decode(p: dict, x, cfg: ModelConfig,
+                     cache: dict) -> Tuple[jax.Array, dict]:
+    """x [b, 1, d] -> (out [b, 1, d], new cache)."""
+    b = x.shape[0]
+    G, S, nh, hd = (cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads,
+                    cfg.ssm_head_dim)
+    z, xBC, dt = _split_in(p, x, cfg)
+    # conv over [history | current]
+    w = p["conv"].shape[0]
+    hist = jnp.concatenate([cache["conv"], xBC], axis=1)  # [b, w, convdim]
+    conv_out = jnp.einsum("bwk,wk->bk", hist, p["conv"])[:, None]
+    xBC = jax.nn.silu(conv_out)
+    new_conv = hist[:, 1:]
+
+    xin = xBC[..., :cfg.d_inner]
+    Bm = xBC[..., cfg.d_inner:cfg.d_inner + G * S].reshape(b, G, S)
+    Cm = xBC[..., cfg.d_inner + G * S:].reshape(b, G, S)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [b,nh]
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)  # [b, nh]
+    xh_raw = xin.reshape(b, nh, hd).astype(jnp.float32)
+    xh = xh_raw * dt[..., None]
+    hpg = nh // G
+    Bh = jnp.repeat(Bm, hpg, axis=1)  # [b, nh, S]
+    Ch = jnp.repeat(Cm, hpg, axis=1)
+    new_state = (cache["state"] * a[..., None, None]
+                 + xh[..., None] * Bh[:, :, None, :].astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch.astype(jnp.float32))
+    y = y + xh_raw * p["D"][None, :, None]  # skip uses raw x (no dt)
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"])
+    return out, {"state": new_state, "conv": new_conv}

@@ -1,0 +1,384 @@
+"""Model composition: embeddings -> scanned layer stack -> head.
+
+Layers are stacked and scanned (``lax.scan``) so even 96-layer configs lower
+to compact HLO. Heterogeneous (hybrid) stacks scan over the repeating
+``layer_pattern`` cycle with any remainder layers unrolled; an optional
+unstacked prefix handles e.g. DeepSeekMoE's dense first layer.
+
+Entry points:
+  init_params(cfg, key, dtype)
+  forward_full(params, cfg, tokens/embeds, ...)        -> logits (train path)
+  prefill(params, cfg, tokens/embeds)                  -> (logits, cache)
+  decode_step(params, cfg, token, pos, cache)          -> (logits, cache)
+  init_cache(cfg, batch, seq_len, dtype)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import embed_init, dense_init, rms_norm, shard_hint
+
+MAX_LEARNED_POS = 32_768  # hubert prefill_32k upper bound
+
+
+# ---------------------------------------------------------------------------
+# Layer plan
+# ---------------------------------------------------------------------------
+
+def layer_plan(cfg: ModelConfig) -> Tuple[int, int, Tuple[str, ...]]:
+    """(n_prefix_layers, n_cycles, rest_kinds)."""
+    kinds = cfg.layer_kinds()
+    n_prefix = 1 if cfg.first_layer_dense else 0
+    body = kinds[n_prefix:]
+    cl = len(cfg.layer_pattern)
+    n_cycles = len(body) // cl
+    rest = body[n_cycles * cl:]
+    return n_prefix, n_cycles, rest
+
+
+def _attn_window(cfg: ModelConfig) -> int:
+    return cfg.sliding_window or cfg.local_window
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, kind: str, key, dtype,
+                dense_mlp: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), dtype)}
+    if kind == "attn":
+        p["attn"] = attn_mod.init_attention(cfg, k1, dtype)
+    elif kind == "rglru":
+        p["rec"] = rglru_mod.init_rglru(cfg, k1, dtype)
+    elif kind == "ssm":
+        p["ssm"] = ssm_mod.init_ssm(cfg, k1, dtype)
+        return p  # mamba2 blocks have no separate MLP
+    else:
+        raise ValueError(kind)
+    p["ln2"] = jnp.zeros((d,), dtype)
+    if cfg.num_experts and not dense_mlp:
+        p["moe"] = moe_mod.init_moe(cfg, k2, dtype)
+    else:
+        ff = cfg.dense_d_ff if (dense_mlp and cfg.dense_d_ff) else (
+            cfg.d_ff if cfg.d_ff else 4 * d)
+        p["mlp"] = mlp_mod.init_mlp(cfg.mlp_kind, d, ff, k2, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32) -> Dict[str, Any]:
+    n_prefix, n_cycles, rest = layer_plan(cfg)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), cfg.d_model, dtype)
+    if cfg.rope_theta <= 0:
+        params["pos_embed"] = embed_init(
+            keys[2], (MAX_LEARNED_POS, cfg.d_model), dtype)
+    if cfg.is_encoder:
+        params["mask_embed"] = embed_init(keys[3], (cfg.d_model,), dtype)
+
+    pattern = cfg.layer_pattern
+    params["prefix"] = tuple(
+        _init_layer(cfg, "attn", k, dtype, dense_mlp=True)
+        for k in jax.random.split(keys[4], n_prefix)) if n_prefix else ()
+
+    if n_cycles:
+        def init_cycle(k):
+            ks = jax.random.split(k, len(pattern))
+            return {f"l{j}": _init_layer(cfg, kind, ks[j], dtype)
+                    for j, kind in enumerate(pattern)}
+        cycle_keys = jax.random.split(keys[5], n_cycles)
+        params["cycles"] = jax.vmap(init_cycle)(cycle_keys)
+    else:
+        params["cycles"] = None
+
+    params["rest"] = tuple(
+        _init_layer(cfg, kind, k, dtype)
+        for kind, k in zip(rest, jax.random.split(keys[6], max(len(rest), 1)))
+    ) if rest else ()
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def _init_layer_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                      dtype) -> Optional[dict]:
+    if kind == "attn":
+        spec = attn_mod.cache_spec(cfg, seq_len, local=cfg.local_window > 0)
+        return attn_mod.init_kv_cache(cfg, batch, spec, dtype)
+    if kind == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    if kind == "rglru":
+        return rglru_mod.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.float32) -> Dict[str, Any]:
+    n_prefix, n_cycles, rest = layer_plan(cfg)
+    pattern = cfg.layer_pattern
+    mk = functools.partial(_init_layer_cache, cfg, batch=batch,
+                           seq_len=seq_len, dtype=dtype)
+    cache: Dict[str, Any] = {
+        "prefix": tuple(mk(kind="attn") for _ in range(n_prefix)),
+        "rest": tuple(mk(kind=k) for k in rest),
+    }
+    if n_cycles:
+        one = {f"l{j}": mk(kind=kind) for j, kind in enumerate(pattern)}
+        cache["cycles"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_cycles,) + x.shape), one)
+    else:
+        cache["cycles"] = None
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _apply_layer(kind: str, p: dict, x, cfg: ModelConfig, *, mode: str,
+                 cache: Optional[dict], pos, positions,
+                 token_cache_updates: bool = False
+                 ) -> Tuple[jax.Array, Optional[dict], jax.Array]:
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = _attn_window(cfg)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    new_cache = None
+    if kind == "attn":
+        causal = not cfg.is_encoder
+        if mode == "full":
+            out = attn_mod.attention_full(p["attn"], h, cfg, positions,
+                                          window=window, causal=causal)
+        elif mode == "prefill":
+            cap = cache["k"].shape[1]
+            # ring writes only needed when the prompt overflows the window
+            spec = attn_mod.CacheSpec(cap, windowed=cap < positions.shape[-1])
+            out, new_cache = attn_mod.attention_prefill(
+                p["attn"], h, cfg, positions, cache, spec, causal=causal)
+        else:  # decode
+            # windowed slot/validity math is a no-op while pos < capacity,
+            # so it is safe to use ring semantics whenever a window exists
+            spec = attn_mod.CacheSpec(cache["k"].shape[1],
+                                      windowed=window > 0)
+            if token_cache_updates:
+                # scanned layers: return only the new token's K/V; the
+                # caller writes the stacked cache once outside the scan
+                out, new_cache = attn_mod.attention_decode_token(
+                    p["attn"], h, cfg, pos, cache, spec)
+            else:
+                out, new_cache = attn_mod.attention_decode(
+                    p["attn"], h, cfg, pos, cache, spec)
+    elif kind == "rglru":
+        if mode == "decode":
+            out, new_cache = rglru_mod.apply_rglru_decode(p["rec"], h, cfg,
+                                                          cache)
+        else:
+            out, new_cache = rglru_mod.apply_rglru_full(
+                p["rec"], h, cfg, with_cache=(mode == "prefill"))
+    elif kind == "ssm":
+        if mode == "decode":
+            out, new_cache = ssm_mod.apply_ssm_decode(p["ssm"], h, cfg, cache)
+        else:
+            out, new_cache = ssm_mod.apply_ssm_full(
+                p["ssm"], h, cfg, with_cache=(mode == "prefill"))
+        x = x + out
+        x = shard_hint(x, ("batch", "seq", "embed_act"))
+        return x, new_cache, aux
+    else:
+        raise ValueError(kind)
+
+    x = x + out
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        if mode == "decode":
+            b = h2.shape[0]
+            out2, aux = moe_mod.apply_moe(
+                p["moe"], h2.reshape(1, b, -1), cfg)
+            out2 = out2.reshape(b, 1, -1)
+        else:
+            out2, aux = moe_mod.apply_moe(p["moe"], h2, cfg)
+    else:
+        out2 = mlp_mod.apply_mlp(p["mlp"], h2, cfg.mlp_kind)
+    x = x + out2
+    x = shard_hint(x, ("batch", "seq", "embed_act"))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Stack runner
+# ---------------------------------------------------------------------------
+
+def _run_stack(params, cfg: ModelConfig, x, *, mode: str,
+               cache: Optional[dict], pos, positions, remat: bool = False):
+    pattern = cfg.layer_pattern
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {"prefix": [], "rest": [], "cycles": None}
+
+    # --- prefix (unrolled) ---
+    for i, lp in enumerate(params["prefix"]):
+        c = cache["prefix"][i] if cache is not None else None
+        x, nc, aux = _apply_layer("attn", lp, x, cfg, mode=mode, cache=c,
+                                  pos=pos, positions=positions)
+        aux_total += aux
+        new_cache["prefix"].append(nc)
+
+    # --- scanned cycles ---
+    if params["cycles"] is not None:
+        with_cache = cache is not None
+        token_updates = mode == "decode"
+
+        def body(carry, xs):
+            xc, auxc = carry
+            if with_cache:
+                cyc_p, cyc_c = xs
+            else:
+                cyc_p, cyc_c = xs, None
+            ncs = {}
+            for j, kind in enumerate(pattern):
+                cj = cyc_c[f"l{j}"] if with_cache else None
+                xc, nc, a = _apply_layer(kind, cyc_p[f"l{j}"], xc, cfg,
+                                         mode=mode, cache=cj, pos=pos,
+                                         positions=positions,
+                                         token_cache_updates=token_updates)
+                auxc = auxc + a
+                ncs[f"l{j}"] = nc if nc is not None else 0
+            return (xc, auxc), (ncs if with_cache else 0)
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        xs = ((params["cycles"], cache["cycles"]) if with_cache
+              else params["cycles"])
+        (x, aux_total), ys = jax.lax.scan(body, (x, aux_total), xs)
+        if with_cache and token_updates:
+            # merge: write each attn layer's new token K/V into the
+            # stacked cache with ONE dynamic-update-slice per tensor
+            window = _attn_window(cfg)
+            merged = {}
+            for j, kind in enumerate(pattern):
+                old = cache["cycles"][f"l{j}"]
+                if kind == "attn":
+                    cap = old["k"].shape[2]
+                    slot = (pos % cap) if window > 0 else pos
+                    k_tok = ys[f"l{j}"]["k_tok"]  # [nc, b, 1, K, hd]
+                    v_tok = ys[f"l{j}"]["v_tok"]
+                    merged[f"l{j}"] = {
+                        "k": jax.lax.dynamic_update_slice(
+                            old["k"], k_tok, (0, 0, slot, 0, 0)),
+                        "v": jax.lax.dynamic_update_slice(
+                            old["v"], v_tok, (0, 0, slot, 0, 0)),
+                    }
+                else:
+                    merged[f"l{j}"] = ys[f"l{j}"]
+            new_cache["cycles"] = merged
+        elif with_cache:
+            new_cache["cycles"] = ys
+
+    # --- rest (unrolled) ---
+    _, n_cycles, rest = layer_plan(cfg)
+    for i, kind in enumerate(rest):
+        lp = params["rest"][i]
+        c = cache["rest"][i] if cache is not None else None
+        x, nc, aux = _apply_layer(kind, lp, x, cfg, mode=mode, cache=c,
+                                  pos=pos, positions=positions)
+        aux_total += aux
+        new_cache["rest"].append(nc)
+
+    new_cache["prefix"] = tuple(new_cache["prefix"])
+    new_cache["rest"] = tuple(new_cache["rest"])
+    return x, (new_cache if cache is not None else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, tokens: Optional[jax.Array],
+                 embeds: Optional[jax.Array], positions: jax.Array,
+                 mask_positions: Optional[jax.Array] = None) -> jax.Array:
+    parts = []
+    if embeds is not None:
+        e = embeds
+        if cfg.is_encoder and mask_positions is not None:
+            e = jnp.where(mask_positions[..., None],
+                          params["mask_embed"].astype(e.dtype), e)
+        parts.append(e)
+    if tokens is not None:
+        parts.append(params["embed"][tokens])
+    x = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][positions]
+    return shard_hint(x, ("batch", "seq", "embed_act"))
+
+
+def lm_logits(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return shard_hint(logits, ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def forward_full(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+                 mask_positions=None, remat: bool = False
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train path). Returns (logits, moe_aux)."""
+    b = (tokens if tokens is not None else embeds).shape[0]
+    s = (0 if tokens is None else tokens.shape[1]) + \
+        (0 if embeds is None else embeds.shape[1])
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_inputs(params, cfg, tokens, embeds, positions, mask_positions)
+    x, _, aux = _run_stack(params, cfg, x, mode="full", cache=None, pos=None,
+                           positions=positions, remat=remat)
+    return lm_logits(params, cfg, x), aux
+
+
+def prefill(params, cfg: ModelConfig, *, tokens=None, embeds=None,
+            cache: Optional[dict] = None, dtype=jnp.float32
+            ) -> Tuple[jax.Array, dict]:
+    """Process the full prompt, fill the cache, return last-pos logits."""
+    b = (tokens if tokens is not None else embeds).shape[0]
+    s = (0 if tokens is None else tokens.shape[1]) + \
+        (0 if embeds is None else embeds.shape[1])
+    if cache is None:
+        cache = init_cache(cfg, b, s, dtype)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = embed_inputs(params, cfg, tokens, embeds, positions)
+    x, new_cache, _ = _run_stack(params, cfg, x, mode="prefill", cache=cache,
+                                 pos=None, positions=positions)
+    return lm_logits(params, cfg, x[:, -1:, :]), new_cache
+
+
+def decode_step(params, cfg: ModelConfig, token: jax.Array, pos,
+                cache: dict) -> Tuple[jax.Array, dict]:
+    """One decode step. token [b] int32; pos scalar int32 (next index)."""
+    b = token.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    x = params["embed"][token][:, None, :]
+    if "pos_embed" in params:
+        x = x + params["pos_embed"][positions]
+    x, new_cache, _ = _run_stack(params, cfg, x, mode="decode", cache=cache,
+                                 pos=pos, positions=positions)
+    return lm_logits(params, cfg, x)[:, 0], new_cache

@@ -1,0 +1,124 @@
+"""Paged KV cache (vLLM-style) for dense-attention models.
+
+Device state: k_pages / v_pages [L, P, page_size, K, hd]; host state: the
+allocator + per-sequence block tables. Writes happen through
+  - ``write_prefill``: bulk scatter of freshly computed K/V, and
+  - ``restore_tokens``: the frame-wise fused dequant+scatter kernel
+    (repro.kernels.kv_restore), i.e. the paper's Sparse_frame_KV_transfer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.kernels.kv_restore.ops import kv_restore
+from repro.paged.allocator import PageAllocator
+
+
+@dataclasses.dataclass
+class SeqInfo:
+    seq_id: int
+    block_table: List[int]
+    context_len: int = 0
+
+
+class PagedKVCache:
+    def __init__(self, cfg: ModelConfig, n_pages: int, page_size: int = 16,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        L = cfg.num_layers
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        shape = (L, n_pages, page_size, K, hd)
+        self.k_pages = jnp.zeros(shape, dtype)
+        self.v_pages = jnp.zeros(shape, dtype)
+        self.alloc = PageAllocator(n_pages)
+        self.seqs: Dict[int, SeqInfo] = {}
+
+    # -- sequence lifecycle ------------------------------------------------
+    def add_seq(self, seq_id: int, n_tokens: int) -> SeqInfo:
+        n = -(-n_tokens // self.page_size)
+        pages = self.alloc.allocate(seq_id, n)
+        info = SeqInfo(seq_id, pages, 0)
+        self.seqs[seq_id] = info
+        return info
+
+    def ensure_capacity(self, seq_id: int, n_tokens: int) -> None:
+        info = self.seqs[seq_id]
+        need = -(-n_tokens // self.page_size)
+        if need > len(info.block_table):
+            info.block_table.extend(
+                self.alloc.extend(seq_id, need - len(info.block_table)))
+
+    def free_seq(self, seq_id: int) -> None:
+        self.alloc.release(seq_id)
+        self.seqs.pop(seq_id, None)
+
+    # -- slot math -----------------------------------------------------------
+    def slots_for(self, seq_id: int, positions: np.ndarray) -> np.ndarray:
+        """Logical token positions -> physical page rows (flat)."""
+        info = self.seqs[seq_id]
+        bt = np.asarray(info.block_table)
+        return bt[positions // self.page_size] * self.page_size + \
+            positions % self.page_size
+
+    def block_table_array(self, seq_ids: List[int],
+                          max_pages: Optional[int] = None) -> np.ndarray:
+        mp = max_pages or max(len(self.seqs[s].block_table)
+                              for s in seq_ids)
+        out = np.zeros((len(seq_ids), mp), np.int32)
+        for i, s in enumerate(seq_ids):
+            bt = self.seqs[s].block_table
+            out[i, :len(bt)] = bt
+        return out
+
+    # -- device writes -------------------------------------------------------
+    def write_prefill(self, layer: int, seq_id: int, k: jax.Array,
+                      v: jax.Array, start_pos: int = 0) -> None:
+        """k/v [s, K, hd] computed by a prefill pass."""
+        s = k.shape[0]
+        positions = np.arange(start_pos, start_pos + s)
+        slots = jnp.asarray(self.slots_for(seq_id, positions), jnp.int32)
+        ps = self.page_size
+        L, P = self.k_pages.shape[:2]
+        flat_k = self.k_pages[layer].reshape(P * ps, *self.k_pages.shape[3:])
+        flat_v = self.v_pages[layer].reshape(P * ps, *self.v_pages.shape[3:])
+        flat_k = flat_k.at[slots].set(k.astype(flat_k.dtype))
+        flat_v = flat_v.at[slots].set(v.astype(flat_v.dtype))
+        self.k_pages = self.k_pages.at[layer].set(
+            flat_k.reshape(self.k_pages.shape[1:]))
+        self.v_pages = self.v_pages.at[layer].set(
+            flat_v.reshape(self.v_pages.shape[1:]))
+
+    def write_decode_token(self, layer: int, seq_id: int, pos: int,
+                           k: jax.Array, v: jax.Array) -> None:
+        self.write_prefill(layer, seq_id, k[None], v[None], start_pos=pos)
+
+    def restore_tokens(self, layer: int, kind: str, seq_id: int,
+                       token_ids: np.ndarray, q_tokens: jax.Array,
+                       scales: jax.Array) -> None:
+        """Frame-wise restoration: decoded uint8 tokens -> page rows.
+
+        q_tokens [n, K, hd] uint8 (one layer, one frame); scales [K].
+        """
+        slots = jnp.asarray(self.slots_for(seq_id, np.asarray(token_ids)),
+                            jnp.int32)
+        ps = self.page_size
+        P = self.n_pages
+        pages = self.k_pages if kind == "k" else self.v_pages
+        flat = pages[layer].reshape(P * ps, *pages.shape[3:])
+        flat = kv_restore(flat, q_tokens, scales, slots)
+        updated = pages.at[layer].set(flat.reshape(pages.shape[1:]))
+        if kind == "k":
+            self.k_pages = updated
+        else:
+            self.v_pages = updated
+
+    def gpu_bytes(self) -> int:
+        return self.k_pages.nbytes + self.v_pages.nbytes

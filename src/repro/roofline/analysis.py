@@ -1,0 +1,243 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh):
+  compute    = HLO_FLOPs / (chips x peak_FLOP/s)
+  memory     = HLO_bytes / (chips x HBM_bw)
+  collective = collective_bytes / (chips x link_bw)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+are parsed from the compiled HLO text (GSPMD has already partitioned it,
+so operand shapes are per-device) by summing operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+from repro.configs.base import InputShape, ModelConfig
+
+# TPU v5e hardware constants (per brief)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# e.g. "bf16[16,4096,1152]{2,1,0}" possibly inside a tuple
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|f16|f32|f64|c64)"
+                       r"\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+
+# ops whose "result" is free (views / control-flow wrappers / loop-carry
+# parameters — a body's parameter is the carried state, not HBM traffic)
+_FREE_OPS = {"get-tuple-element", "tuple", "bitcast", "while",
+             "conditional", "call", "after-all", "constant", "parameter"}
+_RESULT_OP_RE = re.compile(r"=\s*(?:\([^=]*?\)|\S+)\s+([\w\-]+)(?:\.|\()")
+
+
+def hlo_bytes_split(hlo_text: str) -> Dict[str, float]:
+    """Approximate HBM traffic from the partitioned HLO text: sum of
+    result-shape bytes of every real op (x2 for read+write), split into
+    while-body vs outside contributions. Unlike cost_analysis this lets
+    the roofline weight loop bodies by their trip counts and is immune to
+    the CPU backend's unfused byte over-count."""
+    lines = hlo_text.splitlines()
+    body_names = set()
+    for line in lines:
+        if " while(" in line or " while." in line:
+            for m in _BODY_RE.finditer(line):
+                body_names.add(m.group(1))
+    in_loop = outside = 0.0
+    current = None
+    for line in lines:
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line.strip())
+            current = m.group(1) if m else None
+            continue
+        if "=" not in line:
+            continue
+        ls = line.strip()
+        eq = ls.index("=")
+        rhs = ls[eq + 1:].lstrip()
+        # op name = first token after the result shape(s)
+        op_m = re.match(r"(?:\([^)]*\)|[\w\[\],{}:#*]+)\s+([\w\-]+)", rhs)
+        op = op_m.group(1) if op_m else ""
+        if op in _FREE_OPS or op == "":
+            continue
+        # result shapes sit before the op's '(' args
+        paren = rhs.find("(")
+        seg = rhs[:paren] if paren > 0 else rhs
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(seg))
+        if current in body_names:
+            in_loop += nbytes
+        else:
+            outside += nbytes
+    return {"bytes_in_loop": 2.0 * in_loop, "bytes_outside": 2.0 * outside}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, float]:
+    """Sum per-collective result-shape bytes over the partitioned module,
+    split into loop-body vs outside-loop contributions.
+
+    HLO line format: ``%name = TYPE[dims]{layout} op-name(...)`` — the
+    result shape(s) sit between '=' and the op name and are the
+    per-device payload proxy for the transfer. Collectives inside while
+    bodies execute once per trip; those outside execute once per step —
+    the roofline multiplies only the in-loop share by scan_trips.
+    """
+    lines = hlo_text.splitlines()
+    body_names = set()
+    for line in lines:
+        if " while(" in line or " while." in line:
+            for m in _BODY_RE.finditer(line):
+                body_names.add(m.group(1))
+    out: Dict[str, float] = {op: 0.0 for op in _COLL_OPS}
+    count: Dict[str, int] = {op: 0 for op in _COLL_OPS}
+    in_loop_total = 0.0
+    outside_total = 0.0
+    current = None
+    for line in lines:
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line.strip())
+            current = m.group(1) if m else None
+            continue
+        if "=" not in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        if f"{op}-done(" in line:
+            continue  # start/done pairs: count the start only
+        eq = line.index("=")
+        seg = line[eq + 1:m.start()]
+        nbytes = float(sum(_shape_bytes(d, s)
+                           for d, s in _SHAPE_RE.findall(seg)))
+        out[op] += nbytes
+        count[op] += 1
+        if current in body_names:
+            in_loop_total += nbytes
+        else:
+            outside_total += nbytes
+    out["total"] = sum(out[o] for o in _COLL_OPS)
+    out["in_loop"] = in_loop_total
+    out["outside"] = outside_total
+    out["counts"] = count  # type: ignore[assignment]
+    return out
+
+
+def analytic_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """Architecture-aware per-step FLOPs floor (all devices).
+
+    param matmuls + attention (window-aware: the block-skip SWA path makes
+    O(s*W) the true cost) + SSD state-expansion. Train counts fwd+bwd+
+    remat-recompute (8x fwd-param units); inference counts 2x.
+    """
+    train = shape.kind == "train"
+    b, s = shape.global_batch, shape.seq_len
+    tokens = b * (s if shape.kind != "decode" else 1)
+    mult = 8.0 if train else 2.0  # 2(fwd)+4(bwd)+2(remat) vs 2(fwd)
+    total = mult * cfg.param_count(active_only=True) * tokens
+    io_mult = mult / 2.0
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            window = cfg.sliding_window or cfg.local_window
+            if shape.kind == "decode":
+                ctx = min(s, window) if window else s
+                per_tok = 4.0 * ctx * cfg.num_heads * cfg.head_dim
+            else:
+                ctx_avg = min(window, s) if window else s / 2.0
+                per_tok = 4.0 * ctx_avg * cfg.num_heads * cfg.head_dim
+            total += io_mult * per_tok * tokens
+        elif kind == "ssm":
+            q = 64 if shape.kind != "decode" else 1
+            nh, hd, S = cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state
+            G = cfg.ssm_ngroups
+            per_tok = (2.0 * q * nh * hd + 2.0 * q * G * S
+                       + 6.0 * nh * hd * S / max(q, 1))
+            total += io_mult * per_tok * tokens
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE) for train; 2*N*D for inference."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def roofline_report(cfg: ModelConfig, shape: InputShape,
+                    cost: Optional[dict], coll: Dict[str, float],
+                    n_devices: int, scan_trips: int = 1,
+                    bytes_split: Optional[Dict[str, float]] = None) -> dict:
+    """Roofline terms per device.
+
+    XLA's cost_analysis counts while-loop (scan) bodies ONCE (verified
+    empirically), so raw HLO numbers are multiplied by ``scan_trips``
+    (= layer-scan cycles x grad-accum microbatches). The small non-scanned
+    remainder (embedding, logits, optimizer) gets over-multiplied by the
+    same factor — an acceptable upper-bound bias documented in
+    EXPERIMENTS.md, cross-checked against analytic MODEL_FLOPS.
+    """
+    raw_flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    raw_bytes = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
+    flops = raw_flops * scan_trips
+    if bytes_split is not None:
+        nbytes = (bytes_split["bytes_in_loop"] * scan_trips
+                  + bytes_split["bytes_outside"])
+    else:
+        nbytes = raw_bytes * scan_trips
+    if "in_loop" in coll:
+        coll_total = (coll["in_loop"] * scan_trips + coll["outside"])
+    else:
+        coll_total = coll.get("total", 0.0) * scan_trips
+    # analytic compute floor: HLO flops undercount NESTED loop bodies
+    # (e.g. the blocked-attention inner KV scan), so the compute term is
+    # the max of the corrected-HLO and architecture-analytic estimates
+    af = analytic_flops(cfg, shape) / n_devices
+    t_compute = max(flops, af) / PEAK_FLOPS
+    t_memory = nbytes / HBM_BW
+    t_coll = coll_total / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    return {
+        **terms,
+        "dominant": dominant,
+        "analytic_flops_per_device": af,
+        "scan_trips": scan_trips,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_devices,
+        "useful_flops_ratio": (mf / n_devices) / flops if flops else 0.0,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": nbytes,
+        "hlo_flops_raw": raw_flops,
+        "collective_bytes": coll_total,
+    }

@@ -1,0 +1,128 @@
+"""Logical-axis annotation of whole pytrees (params, optimizer state,
+KV caches, batches) by tree path — the bridge between the model zoo's
+parameter structure and the mesh rules in repro.sharding.rules.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+from repro.configs.base import ModelConfig
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, SequenceKey):
+            out.append(f"[{k.idx}]")
+        elif isinstance(k, GetAttrKey):
+            out.append(k.name)
+    return tuple(out)
+
+
+def _param_leaf_axes(names: Tuple[str, ...], ndim: int) -> Tuple:
+    """Logical axes for one parameter leaf, by its tree path."""
+    name = names[-1]
+    in_cycles = "cycles" in names
+    in_moe = "moe" in names and "shared" not in names
+
+    def wrap(axes):
+        axes = tuple(axes)
+        assert len(axes) + (1 if in_cycles else 0) == ndim, (names, ndim,
+                                                             axes)
+        return (("layers",) + axes) if in_cycles else axes
+
+    if name == "embed":
+        return ("vocab", "embed")
+    if name == "pos_embed":
+        return (None, "embed")
+    if name == "lm_head":
+        return ("embed", "vocab")
+    if name in ("final_norm", "mask_embed"):
+        return (None,)
+    if name in ("ln1", "ln2", "norm_w", "lam", "A_log", "D", "dt_bias"):
+        return wrap((None,) * (ndim - (1 if in_cycles else 0)))
+    if name == "wq":
+        return wrap(("embed", "heads", None))
+    if name in ("wk", "wv"):
+        return wrap(("embed", "kv_heads", None))
+    if name == "bq":
+        return wrap(("heads", None))
+    if name in ("bk", "bv"):
+        return wrap(("kv_heads", None))
+    if name == "wo" and "attn" in names:
+        return wrap(("heads", None, "embed"))
+    if name == "router":
+        return wrap(("embed", "experts"))
+    if name == "wi":
+        body = ndim - (1 if in_cycles else 0)
+        if in_moe:
+            return wrap(("experts", "embed", None, "mlp") if body == 4
+                        else ("experts", "embed", "mlp"))
+        return wrap(("embed", None, "mlp") if body == 3
+                    else ("embed", "mlp"))
+    if name == "wo":  # mlp / moe (attn handled above)
+        if in_moe:
+            return wrap(("experts", "mlp", "embed"))
+        return wrap(("mlp", "embed"))
+    if name == "w_in":
+        return wrap(("embed", "ssm_inner"))
+    if name == "conv":
+        kind = "ssm_inner" if "ssm" in names else "rglru_width"
+        return wrap((None, kind))
+    if name == "w_out":
+        kind = "ssm_inner" if "ssm" in names else "rglru_width"
+        return wrap((kind, "embed"))
+    if name in ("w_x", "w_gate"):
+        return wrap(("embed", "rglru_width"))
+    if name in ("w_a", "w_i"):
+        return wrap((None, "rglru_width"))
+    raise ValueError(f"no axis rule for param {names}")
+
+
+def param_axes(params_shapes) -> Any:
+    """Tree of logical-axes tuples matching a params(-shaped) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _param_leaf_axes(_path_names(p), len(x.shape)),
+        params_shapes)
+
+
+def _cache_leaf_axes(names: Tuple[str, ...], ndim: int) -> Tuple:
+    name = names[-1]
+    in_cycles = "cycles" in names
+
+    def wrap(axes):
+        axes = tuple(axes)
+        assert len(axes) + (1 if in_cycles else 0) == ndim, (names, ndim)
+        return (("layers",) + axes) if in_cycles else axes
+
+    if name in ("k", "v"):
+        return wrap(("batch", "cache_seq", "kv_heads", None))
+    if name == "state":
+        return wrap(("batch", "ssm_heads", None, "ssm_state"))
+    if name == "conv":
+        # ssm conv [b, w-1, convdim] / rglru conv [b, w-1, w]: the channel
+        # dim shards over "model" either way (logical "conv_channels")
+        return wrap(("batch", None, "conv_channels"))
+    if name == "h":
+        return wrap(("batch", "rglru_width"))
+    raise ValueError(f"no axis rule for cache leaf {names}")
+
+
+def cache_axes(cache_shapes) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _cache_leaf_axes(_path_names(p), len(x.shape)),
+        cache_shapes)
+
+
+def batch_axes(batch_shapes) -> Any:
+    def leaf(path, x):
+        name = _path_names(path)[-1]
+        if name in ("patch_embeds", "frame_embeds"):
+            return ("batch", None, None)
+        return ("batch",) + (None,) * (len(x.shape) - 1)
+    return jax.tree_util.tree_map_with_path(leaf, batch_shapes)

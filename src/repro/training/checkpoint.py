@@ -1,0 +1,39 @@
+"""Pytree checkpointing: npz payload + JSON tree structure."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(path + ".npz", **arrays)
+    with open(path + ".tree.json", "w") as f:
+        json.dump({"treedef": str(treedef), "n": len(leaves)}, f)
+
+
+def restore(path: str, like) -> Any:
+    """Restore into the structure of `like` (shape/dtype verified)."""
+    data = np.load(path + ".npz")
+    leaves, treedef = _flatten(like)
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        assert arr.shape == tuple(ref.shape), (i, arr.shape, ref.shape)
+        out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path + ".npz")

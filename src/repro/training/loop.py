@@ -1,0 +1,43 @@
+"""Training driver: config in, loss curve out. CPU-smoke friendly."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, batches
+from repro.training import checkpoint
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.steps import init_state, make_train_step
+
+
+def train(cfg: ModelConfig, *, steps: int = 20, batch_size: int = 4,
+          seq_len: int = 64, lr: float = 3e-4, accum_steps: int = 1,
+          seed: int = 0, ckpt_path: Optional[str] = None,
+          log_every: int = 5) -> List[Dict[str, float]]:
+    optimizer = AdamW(lr=cosine_schedule(lr, warmup=max(steps // 10, 1),
+                                         total=steps))
+    state = init_state(cfg, optimizer, jax.random.PRNGKey(seed))
+    step_fn = jax.jit(make_train_step(cfg, optimizer,
+                                      accum_steps=accum_steps))
+    data = batches(cfg, DataConfig(batch_size=batch_size, seq_len=seq_len,
+                                   seed=seed))
+    history: List[Dict[str, float]] = []
+    t0 = time.time()
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        state, metrics = step_fn(state, batch)
+        rec = {k: float(v) for k, v in metrics.items()}
+        rec["step"] = i
+        history.append(rec)
+        if log_every and i % log_every == 0:
+            print(f"step {i:4d} loss {rec['loss']:.4f} "
+                  f"gnorm {rec['grad_norm']:.3f} "
+                  f"({time.time() - t0:.1f}s)")
+    if ckpt_path:
+        checkpoint.save(ckpt_path, state.params)
+    return history

@@ -1,0 +1,78 @@
+"""Pure-JAX AdamW with decoupled weight decay + LR schedules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(jnp.zeros((), jnp.int32), zeros,
+                          jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip /
+                                jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state.count + 1
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+        m = jax.tree.map(lambda mm, g: self.b1 * mm + (1 - self.b1) * g,
+                         state.m, grads)
+        v = jax.tree.map(lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g,
+                         state.v, grads)
+        lr = self.lr(count)
+
+        def upd(p, mm, vv):
+            mhat = mm / b1c
+            vhat = vv / b2c
+            du = mhat / (jnp.sqrt(vhat) + self.eps)
+            du = du + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * du).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(count, m, v)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in leaves))
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = peak * c / max(warmup, 1)
+        frac = jnp.clip((c - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(c < warmup, warm, cos)
+    return lr
+
+
+def constant_schedule(value: float):
+    return lambda count: jnp.asarray(value, jnp.float32)

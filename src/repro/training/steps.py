@@ -1,0 +1,89 @@
+"""Train / eval step factories over the model zoo (all architectures).
+
+``make_train_step`` builds a jit-able (state, batch) -> (state, metrics)
+function with remat'd scanned layers, optional gradient accumulation
+(bounds activation memory for the 100B+ configs), MoE aux loss, and the
+per-arch loss heads (causal LM / VLM text-only / HuBERT masked units).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.common import cross_entropy
+from repro.training.optimizer import AdamW, AdamWState, global_norm
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    step: jax.Array
+
+
+def init_state(cfg: ModelConfig, optimizer: AdamW, key,
+               dtype=jnp.float32) -> TrainState:
+    params = tf.init_params(cfg, key, dtype)
+    return TrainState(params, optimizer.init(params),
+                      jnp.zeros((), jnp.int32))
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            aux_coef: float = 0.01, remat: bool = True):
+    tokens = batch.get("tokens")
+    embeds = batch.get("patch_embeds", batch.get("frame_embeds"))
+    mask_positions = batch.get("mask")
+    logits, moe_aux = tf.forward_full(params, cfg, tokens=tokens,
+                                      embeds=embeds,
+                                      mask_positions=mask_positions,
+                                      remat=remat)
+    labels = batch["labels"]
+    if cfg.is_encoder:
+        # HuBERT-style masked-unit prediction: loss on masked frames only
+        loss = cross_entropy(logits, labels, mask=mask_positions)
+    elif cfg.frontend == "vision":
+        # loss over text positions only (patches are prefix)
+        np_ = cfg.num_patch_tokens
+        text_logits = logits[:, np_:, :]
+        loss = cross_entropy(text_logits[:, :-1], labels[:, 1:])
+    else:
+        loss = cross_entropy(logits[:, :-1], labels[:, 1:])
+    total = loss + aux_coef * moe_aux
+    return total, {"loss": loss, "moe_aux": moe_aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer: AdamW, *,
+                    accum_steps: int = 1, remat: bool = True,
+                    donate: bool = True):
+    grad_fn = jax.value_and_grad(
+        functools.partial(loss_fn, cfg=cfg, remat=remat), has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        if accum_steps == 1:
+            (_, metrics), grads = grad_fn(state.params, batch=batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (_, m), g = grad_fn(state.params, batch=mb)
+                acc = jax.tree.map(jnp.add, acc,
+                                   jax.tree.map(
+                                       lambda x: x.astype(jnp.float32), g))
+                return acc, m
+            split = jax.tree.map(
+                lambda x: x.reshape((accum_steps, -1) + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            grads, ms = jax.lax.scan(micro, zeros, split)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda x: x.mean(), ms)
+        new_params, new_opt = optimizer.update(grads, state.opt,
+                                               state.params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = global_norm(grads)
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,208 @@
+"""Codec round-trip + layout + entropy tests (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import entropy
+from repro.core.codec import KVCodec
+from repro.core.layout import (
+    IntraLayout, frame_geometry, intra_candidates, pack_frames,
+    unpack_frames, unpack_single_frame, tile_forward, tile_inverse,
+)
+from repro.core.prediction import predict_decode, predict_encode
+from repro.core.quantization import dequantize, quantize
+
+
+def _kv_like(rng, T, L, H, D):
+    """Synthetic KV with token-adjacent similarity (AR(1) along tokens)."""
+    base = rng.standard_normal((1, L, H, D)).astype(np.float32)
+    noise = rng.standard_normal((T, L, H, D)).astype(np.float32)
+    out = np.empty((T, L, H, D), np.float32)
+    out[0] = base[0] + 0.1 * noise[0]
+    for t in range(1, T):
+        out[t] = out[t - 1] * 0.98 + 0.08 * noise[t]
+    return out * 3.0
+
+
+# ---------------------------------------------------------------------------
+# entropy
+# ---------------------------------------------------------------------------
+
+@given(st.binary(min_size=0, max_size=4096),
+       st.sampled_from([1, 2, 64, 256]))
+@settings(max_examples=40, deadline=None)
+def test_rans_roundtrip_property(data, lanes):
+    arr = np.frombuffer(data, np.uint8)
+    blob = entropy.encode(arr, lanes=lanes)
+    assert np.array_equal(entropy.decode(blob), arr)
+
+
+def test_rans_streaming_matches_bulk():
+    rng = np.random.default_rng(0)
+    arr = np.minimum(rng.geometric(0.2, 10_000) - 1, 255).astype(np.uint8)
+    blob = entropy.encode(arr)
+    dec = entropy.StreamDecoder(blob)
+    parts = [dec.read(n) for n in (1, 7, 100, 5000, 10_000)]
+    assert np.array_equal(np.concatenate(parts), arr)
+
+
+def test_rans_near_entropy():
+    rng = np.random.default_rng(1)
+    arr = np.minimum(rng.geometric(0.3, 200_000) - 1, 255).astype(np.uint8)
+    blob = entropy.encode(arr)
+    bound = entropy.entropy_bits(arr) / 8
+    assert len(blob) < bound * 1.1 + 2048
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(2)
+    kv = _kv_like(rng, 64, 3, 8, 32)
+    q, scales = quantize(kv)
+    deq = dequantize(q, scales)
+    # max error <= scale/2 per (layer, head)
+    err = np.abs(deq - kv)
+    bound = scales[None, :, :, None] * 0.5 + 1e-6
+    assert (err <= bound).all()
+    # re-quantizing the dequantized tensor is a fixed point (bit-exact)
+    q2, _ = quantize(deq)
+    mism = (q2.astype(int) - q.astype(int))
+    assert np.abs(mism).max() <= 1  # rint boundary wobble at most
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([(8, 32), (16, 64), (4, 16), (32, 128)]),
+       st.integers(1, 5))
+@settings(max_examples=20, deadline=None)
+def test_tile_roundtrip_property(hd, seed):
+    H, D = hd
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 256, (5, 3, H, D)).astype(np.uint8)
+    for lay in intra_candidates(H, D):
+        t = tile_forward(x, lay)
+        assert t.shape[-2:] == lay.tile
+        back = tile_inverse(t, lay)
+        assert np.array_equal(back, x)
+
+
+@pytest.mark.parametrize("T,res", [(7, "240p"), (100, "240p"),
+                                   (300, "480p"), (50, "1080p")])
+def test_pack_unpack_roundtrip(T, res):
+    H, D = 8, 32
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 256, (T, 3, H, D)).astype(np.uint8)
+    lay = IntraLayout(H, D, 4, 2)
+    geom = frame_geometry(T, lay, res)
+    video = pack_frames(q, lay, geom)
+    assert video.shape == (geom.n_frames,) + geom.frame_shape
+    back = unpack_frames(video, lay, geom)
+    assert np.array_equal(back, q)
+    # frame-wise unpack covers every token exactly once
+    seen = np.zeros(T, bool)
+    for f in range(geom.n_frames):
+        toks, qt = unpack_single_frame(video[f], lay, geom, f)
+        assert not seen[toks].any()
+        seen[toks] = True
+        assert np.array_equal(qt, q[toks])
+    assert seen.all()
+
+
+def test_interframe_layout_adjacent_tokens_same_slot():
+    """Tokens t, t+1 occupy the same pixel region in consecutive frames."""
+    H, D = 32, 128
+    T = 64
+    lay = IntraLayout(H, D, 32, 1)  # tile (32, 128) -> 21 slots at 240p
+    geom = frame_geometry(T, lay, "240p")
+    F = geom.n_frames
+    assert F >= 2
+    q = np.zeros((T, 3, H, D), np.uint8)
+    t0 = 5 * F  # slot 5, frame 0
+    q[t0] = 200
+    q[t0 + 1] = 201
+    video = pack_frames(q, lay, geom)
+    pos0 = np.argwhere(video[0] == 200)
+    pos1 = np.argwhere(video[1] == 201)
+    assert np.array_equal(pos0, pos1)
+
+
+# ---------------------------------------------------------------------------
+# prediction
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 6))
+@settings(max_examples=7, deadline=None)
+def test_prediction_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    video = rng.integers(0, 256, (4, 16, 24, 3)).astype(np.uint8)
+    # make some planes temporally similar to exercise mode decisions
+    video[1] = video[0] + rng.integers(-2, 3, video[1].shape).astype(np.uint8)
+    zres, modes = predict_encode(video)
+    back = predict_decode(zres, modes)
+    assert np.array_equal(back, video)
+
+
+def test_prediction_picks_temporal_for_similar_frames():
+    rng = np.random.default_rng(0)
+    f0 = rng.integers(0, 256, (16, 24)).astype(np.uint8)
+    video = np.stack([np.stack([f0 + np.uint8(i)] * 3, -1)
+                      for i in range(4)])
+    _, modes = predict_encode(video)
+    assert (modes[1:] == 1).all()  # MODE_TEMPORAL
+
+
+# ---------------------------------------------------------------------------
+# codec end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("res", ["240p", "1080p"])
+@pytest.mark.parametrize("nl", [1, 2, 3])
+def test_codec_chunk_roundtrip_bit_exact(res, nl):
+    rng = np.random.default_rng(3)
+    H, D = 8, 32
+    kv = _kv_like(rng, 96, nl, H, D)
+    q, scales = quantize(kv)
+    codec = KVCodec(H, D, IntraLayout(H, D, 4, 4))
+    blob = codec.encode_chunk(q, res)
+    back = codec.decode_chunk(blob)
+    assert np.array_equal(back, q)  # lossless after quantization
+    # frame-wise decode agrees token-by-token
+    got = np.zeros_like(q)
+    for toks, qt in codec.iter_decode_frames(blob):
+        got[toks] = qt
+    assert np.array_equal(got, q)
+
+
+def test_codec_compresses_correlated_kv():
+    rng = np.random.default_rng(4)
+    H, D = 8, 64
+    # strong token-adjacent correlation (the paper's SSIM-0.87 regime)
+    noise = rng.standard_normal((1024, 3, H, D)).astype(np.float32)
+    kv = np.empty_like(noise)
+    kv[0] = noise[0]
+    for t in range(1, kv.shape[0]):
+        kv[t] = kv[t - 1] * 0.995 + 0.02 * noise[t]
+    q, _ = quantize(kv * 3.0)
+    codec = KVCodec(H, D)
+    codec.search_layout(q[:256], "240p")
+    blob = codec.encode_chunk(q, "240p")
+    ratio = q.nbytes / len(blob)
+    assert ratio > 2.5, ratio  # prediction+entropy must beat raw int8
+
+
+def test_layout_search_beats_identity():
+    rng = np.random.default_rng(5)
+    H, D = 16, 64
+    kv = _kv_like(rng, 128, 3, H, D)
+    q, _ = quantize(kv)
+    codec = KVCodec(H, D)
+    log = []
+    best = codec.search_layout(q, "1080p", log=log)
+    costs = {(hr, dr): c for hr, dr, c in log}
+    assert costs[(best.hr, best.dr)] == min(costs.values())
+    assert len(log) == len(intra_candidates(H, D))

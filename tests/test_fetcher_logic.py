@@ -1,0 +1,196 @@
+"""Unit tests: Alg. 1 adaptive resolution, Appx A.3 pipeline condition,
+fetching-aware scheduler queue behaviour, fetch plans and manifests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adaptive import (
+    GBPS, H20_TABLE, L20_TABLE, BandwidthEstimator, select_resolution,
+)
+from repro.core.chunks import (
+    decode_chunk_tokens, decode_state_snapshot, encode_prefix,
+    encode_state_snapshot,
+)
+from repro.core.fetch import build_plan
+from repro.core.pipelining import max_admission_buffer, non_blocking_ok
+from repro.core.scheduler import FetchingAwareScheduler, ReqState, Request
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1
+# ---------------------------------------------------------------------------
+
+def test_adaptive_prefers_low_res_on_slow_network():
+    r_slow, _ = select_resolution(1 * GBPS, 0, H20_TABLE)
+    r_fast, _ = select_resolution(40 * GBPS, 0, H20_TABLE)
+    order = ["240p", "480p", "640p", "1080p"]
+    assert order.index(r_slow) <= order.index(r_fast)
+    assert r_slow == "240p"
+
+
+def test_adaptive_paper_example_fig17():
+    """Paper Fig.17: at ~3 Gbps with the H20 table the adapter picks 240p;
+    when bandwidth recovers it moves to a higher resolution."""
+    r3, _ = select_resolution(3 * GBPS, 0, H20_TABLE,
+                              active_resolution="1080p")
+    r6, _ = select_resolution(6 * GBPS, 0, H20_TABLE,
+                              active_resolution=r3)
+    order = ["240p", "480p", "640p", "1080p"]
+    assert order.index(r3) < order.index(r6)
+
+
+def test_adaptive_accounts_for_pool_load():
+    # under heavy pool load decode gets slower -> larger chunks tolerated
+    r_idle, b_idle = select_resolution(8 * GBPS, 0, H20_TABLE)
+    r_busy, b_busy = select_resolution(8 * GBPS, 6, H20_TABLE)
+    order = ["240p", "480p", "640p", "1080p"]
+    assert order.index(r_busy) >= order.index(r_idle)
+
+
+@given(st.floats(0.5, 100), st.integers(0, 6))
+@settings(max_examples=50, deadline=None)
+def test_adaptive_returns_min_bubble(gbps, load):
+    res, bubble = select_resolution(gbps * GBPS, load, H20_TABLE)
+    for r in H20_TABLE.latency:
+        size = H20_TABLE.chunk_size_mb[r] * 1e6
+        alt = abs(size / (gbps * GBPS) - H20_TABLE.decode_latency(r, load + 1))
+        assert bubble <= alt + 1e-9
+
+
+def test_bandwidth_estimator():
+    est = BandwidthEstimator(10 * GBPS)
+    est.observe(int(1 * GBPS), 1.0)  # 1 Gbps observed
+    assert est.est == pytest.approx(1 * GBPS)
+
+
+# ---------------------------------------------------------------------------
+# Appx A.3 layer-wise pipeline condition
+# ---------------------------------------------------------------------------
+
+def test_non_blocking_condition():
+    # decode each layer 1s, compute each layer 2s: after 1 buffered layer
+    # decode always stays ahead
+    dec = [1.0] * 8
+    comp = [2.0] * 8
+    assert not non_blocking_ok(dec, comp, 0)  # layer 1 would stall
+    assert non_blocking_ok(dec, comp, 1)
+    assert max_admission_buffer(dec, comp) == 1
+    # slow decode: must buffer everything
+    dec2 = [5.0] * 8
+    assert max_admission_buffer(dec2, comp) == 8
+
+
+@given(st.lists(st.floats(0.01, 5), min_size=1, max_size=12),
+       st.lists(st.floats(0.01, 5), min_size=1, max_size=12))
+@settings(max_examples=50, deadline=None)
+def test_max_admission_buffer_is_minimal(dec, comp):
+    n = min(len(dec), len(comp))
+    dec, comp = dec[:n], comp[:n]
+    lb = max_admission_buffer(dec, comp)
+    assert non_blocking_ok(dec, comp, lb)
+    if lb > 0:
+        assert not non_blocking_ok(dec, comp, lb - 1)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+def _reqs():
+    a = Request(rid=1, arrival=0.0, prompt_len=50_000, reuse_tokens=40_000,
+                prefix="p1")
+    b = Request(rid=2, arrival=0.1, prompt_len=1_000)
+    c = Request(rid=3, arrival=0.2, prompt_len=2_000)
+    return a, b, c
+
+
+def test_kvfetcher_scheduler_no_hol_blocking():
+    s = FetchingAwareScheduler("kvfetcher", max_running=2)
+    a, b, c = _reqs()
+    for r in (a, b, c):
+        s.submit(r, r.arrival)
+    admitted = s.schedule(0.3)
+    # fetching request A is isolated; B and C run immediately
+    assert [r.rid for r in admitted] == [2, 3]
+    assert a.state is ReqState.WAITING_FOR_KV
+    assert [r.rid for r in s.take_fetches()] == [1]
+    # fetch completes -> A readmitted at queue head
+    s.finish(b, 1.0)
+    a.fetch_started = 0.3
+    s.notify_fetch_done(a, 2.0)
+    admitted = s.schedule(2.0)
+    assert [r.rid for r in admitted] == [1]
+
+
+def test_fetch_agnostic_scheduler_hol_blocks():
+    s = FetchingAwareScheduler("fetch_agnostic", max_running=2)
+    a, b, c = _reqs()
+    for r in (a, b, c):
+        s.submit(r, r.arrival)
+    admitted = s.schedule(0.3)
+    assert admitted == []  # A blocks the head of the FCFS queue
+    a.fetch_started = 0.3
+    s.notify_fetch_done(a, 5.0)
+    admitted = s.schedule(5.0)
+    assert [r.rid for r in admitted] == [1, 2]
+
+
+def test_early_admission_via_layerwise_condition():
+    s = FetchingAwareScheduler("kvfetcher", max_running=2)
+    a, _, _ = _reqs()
+    s.submit(a, 0.0)
+    s.schedule(0.0)
+    assert a.state is ReqState.WAITING_FOR_KV
+    s.notify_early_admissible(a, 1.0)
+    admitted = s.schedule(1.0)
+    assert admitted == [a] and a.early_admitted
+
+
+# ---------------------------------------------------------------------------
+# Manifests / fetch plans / state snapshots
+# ---------------------------------------------------------------------------
+
+def _manifest(T=64, L=5, H=4, D=16):
+    rng = np.random.default_rng(0)
+    kv_k = rng.standard_normal((T, L, H, D)).astype(np.float32)
+    kv_v = rng.standard_normal((T, L, H, D)).astype(np.float32)
+    return encode_prefix(kv_k, kv_v, prefix="p", tokens_per_chunk=32,
+                         resolutions=("240p", "1080p")), kv_k, kv_v
+
+
+def test_manifest_roundtrip_and_plan_order():
+    man, kv_k, kv_v = _manifest()
+    assert man.layer_groups == [(0, 1, 2), (3, 4)]
+    plan = build_plan(1, man)
+    # layer-group-major ordering
+    groups = [pc.ref.group for pc in plan.chunks]
+    assert groups == sorted(groups)
+    assert plan.n_layers_total == 5
+    # decode one chunk and compare with quantization-only error bound
+    ref = plan.chunks[0].ref
+    deq = decode_chunk_tokens(man, ref.chunk_id, "240p", 4, 16)
+    orig = kv_k[ref.token_start:ref.token_end][:, list(ref.layers)]
+    sc = man.scales["k"][list(ref.layers)]
+    assert (np.abs(deq - orig) <= sc[None, :, :, None] * 0.5 + 1e-6).all()
+    # layer readiness tracks restored chunks front-to-back
+    assert plan.layers_ready() == 0
+    for pc in plan.chunks:
+        if pc.ref.group == 0:
+            pc.t_restored = 1.0
+    assert plan.layers_ready() == 3
+    for pc in plan.chunks:
+        pc.t_restored = 1.0
+    assert plan.layers_ready() == 5 and plan.done
+
+
+def test_state_snapshot_roundtrip():
+    rng = np.random.default_rng(1)
+    states = {"layer0.state": rng.standard_normal((8, 16, 4)).astype(
+        np.float32), "layer0.conv": rng.standard_normal((3, 32)).astype(
+        np.float32)}
+    blob = encode_state_snapshot(states)
+    back = decode_state_snapshot(blob)
+    for k in states:
+        absmax = np.abs(states[k]).max()
+        assert back[k].shape == states[k].shape
+        assert np.abs(back[k] - states[k]).max() <= absmax / 127 * 0.51

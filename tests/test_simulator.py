@@ -1,0 +1,107 @@
+"""Simulator behaviour tests: the paper's qualitative claims must hold in
+the discrete-event harness (relative orderings, not absolute numbers)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.adaptive import H20_TABLE
+from repro.cluster.network import BandwidthTrace
+from repro.cluster.simulator import (
+    ServingSimulator, cachegen_spec, full_prefill_spec, kvfetcher_spec,
+    llm265_spec, lmcache_raw_spec, raw_spec,
+)
+from repro.data.workload import fixed_context_trace, poisson_trace
+from repro.serving.metrics import summarize
+
+CFG = get_config("yi-34b")
+RATIOS = {"240p": 9.0, "480p": 8.5, "640p": 8.0, "1080p": 7.0}
+
+
+def _run(method, *, gbps=16.0, ctx=100_000, n=3, trace=None, **kw):
+    bw = trace or BandwidthTrace.constant(gbps)
+    sim = ServingSimulator(CFG, method, chip="h20", n_chips=2,
+                           bandwidth=bw, table=H20_TABLE, **kw)
+    reqs = fixed_context_trace(ctx, n_requests=n, gap=60.0)
+    return sim.run(reqs, max_new_tokens=8)
+
+
+def test_kvfetcher_beats_raw_and_full_prefill_on_slow_network():
+    ours = _run(kvfetcher_spec(RATIOS), gbps=16)
+    raw = _run(raw_spec(), gbps=16)
+    full = _run(full_prefill_spec(), gbps=16)
+    t_ours = summarize(ours.fetching())["ttft_mean"]
+    t_raw = summarize(raw.fetching())["ttft_mean"]
+    t_full = summarize(full.requests)["ttft_mean"]
+    assert t_ours < t_raw < t_full
+    # sanity: magnitudes in the paper's regime (seconds, not ms or hours)
+    assert 0.05 < t_ours < t_full < 3600
+
+
+def test_kvfetcher_beats_cachegen_at_low_bandwidth():
+    ours = _run(kvfetcher_spec(RATIOS), gbps=8)
+    cg = _run(cachegen_spec(ratio=3.5), gbps=8)
+    assert summarize(ours.fetching())["ttft_mean"] < \
+        summarize(cg.fetching())["ttft_mean"]
+
+
+def test_blocking_fetch_is_worse_than_pipelined():
+    ours = _run(kvfetcher_spec(RATIOS), gbps=8)
+    lm = _run(lmcache_raw_spec(), gbps=8)
+    assert summarize(ours.fetching())["ttft_mean"] < \
+        summarize(lm.fetching())["ttft_mean"]
+
+
+def test_nonreuse_requests_not_blocked_by_fetches():
+    """Fig. 19: mixed workload; fetch-aware scheduling shields non-reuse
+    requests from fetching requests (HOL blocking)."""
+    rng = np.random.default_rng(0)
+    reqs_a = poisson_trace(rng, n_requests=12, rate=0.5,
+                           prompt_lens=(2_000, 90_000),
+                           reuse_threshold=40_000)
+    rng = np.random.default_rng(0)
+    reqs_b = poisson_trace(rng, n_requests=12, rate=0.5,
+                           prompt_lens=(2_000, 90_000),
+                           reuse_threshold=40_000)
+    bw = BandwidthTrace.constant(4.0)
+    ours = ServingSimulator(CFG, kvfetcher_spec(RATIOS), bandwidth=bw,
+                            table=H20_TABLE).run(reqs_a, max_new_tokens=8)
+    cg = ServingSimulator(CFG, cachegen_spec(3.5), bandwidth=bw,
+                          table=H20_TABLE).run(reqs_b, max_new_tokens=8)
+    t_ours = summarize(ours.non_reuse())["ttft_mean"]
+    t_cg = summarize(cg.non_reuse())["ttft_mean"]
+    assert t_ours < t_cg
+
+
+def test_adaptive_resolution_helps_under_jitter():
+    """Fig. 23: adaptive resolution beats fixed 1080p under jitter."""
+    rng = np.random.default_rng(1)
+    trace = BandwidthTrace.steps(
+        [(0, 6), (5, 3), (15, 4), (25, 2), (35, 6), (45, 3)])
+    adaptive = _run(kvfetcher_spec(RATIOS), trace=trace, n=2)
+    import dataclasses
+    fixed = dataclasses.replace(kvfetcher_spec(RATIOS), adaptive=False,
+                                fixed_resolution="1080p", name="fixed")
+    fix = _run(fixed, trace=trace, n=2)
+    assert summarize(adaptive.fetching())["ttft_mean"] <= \
+        summarize(fix.fetching())["ttft_mean"] * 1.05
+
+
+def test_framewise_restoration_memory():
+    """Fig. 24: frame-wise buffer orders of magnitude below chunk-wise."""
+    ours = _run(kvfetcher_spec(RATIOS), gbps=16, n=1)
+    lm = _run(llm265_spec(5.0), gbps=16, n=1)
+    assert ours.decompress_buffer_high_water < 100e6
+    assert lm.decompress_buffer_high_water > \
+        5 * ours.decompress_buffer_high_water
+
+
+def test_decode_pool_utilized():
+    ours = _run(kvfetcher_spec(RATIOS), gbps=16, n=2)
+    assert 0.0 < ours.decode_pool_utilization <= 1.0
+
+
+def test_ttft_grows_with_context():
+    a = _run(kvfetcher_spec(RATIOS), ctx=50_000, n=2)
+    b = _run(kvfetcher_spec(RATIOS), ctx=150_000, n=2)
+    assert summarize(a.fetching())["ttft_mean"] < \
+        summarize(b.fetching())["ttft_mean"]
