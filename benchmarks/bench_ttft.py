@@ -2,14 +2,19 @@
 
 Compression ratios fed to the simulator are measured by
 bench_compression on real KV (conservative defaults used here so the
-bench stays fast; see EXPERIMENTS.md for the measured values)."""
+bench stays fast; see EXPERIMENTS.md for the measured values).
+
+The ``ttft.live.*`` rows run the REAL engine (real model, real codec,
+real paged memory) on a virtual clock over a bandwidth-limited trace,
+comparing the event-driven async fetch pipeline against the serialized
+sync baseline and the fetch-agnostic (HOL-blocking) scheduler."""
 from __future__ import annotations
 
 from typing import List
 
 from benchmarks.common import Row
 from repro.configs import get_config
-from repro.core.adaptive import H20_TABLE
+from repro.core.adaptive import H20_TABLE, DecodeTable
 from repro.cluster.network import BandwidthTrace
 from repro.cluster.simulator import (
     ServingSimulator, cachegen_spec, full_prefill_spec, kvfetcher_spec,
@@ -30,6 +35,63 @@ def _ttft(spec, gbps: float, ctx: int) -> float:
                   max_new_tokens=8)
     reqs = res.fetching() or res.requests
     return summarize(reqs)["ttft_mean"]
+
+
+def _live_rows() -> List[Row]:
+    """kvfetcher-async vs kvfetcher-sync vs fetch_agnostic on the live
+    engine, bandwidth-limited (paper §3.3: pipelining is the TTFT win)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import reduce_config
+    from repro.cluster.storage import KVStore
+    from repro.core.chunks import prefix_key
+    from repro.models import transformer as tf
+    from repro.serving import paged_model
+    from repro.serving.engine import LiveEngine
+
+    cfg = reduce_config(get_config("lwm-7b"))
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(7)
+    prefix = rng.integers(0, cfg.vocab_size, 96)
+    full = np.concatenate([prefix, rng.integers(0, cfg.vocab_size, 8)])
+    plain = rng.integers(0, cfg.vocab_size, 16)
+    kv_k, kv_v = paged_model.donor_prefix_kv(params, cfg, prefix)
+    store = KVStore()
+    key = prefix_key(prefix)
+    store.register_prefix(prefix, kv_k, kv_v, tokens_per_chunk=24,
+                          resolutions=("240p", "480p", "1080p"))
+    # decode table scaled to this toy model's ~25 kB chunks
+    table = DecodeTable(
+        name="live-bench", n_decoders=2,
+        latency={r: (0.04, 0.05) for r in RATIOS},
+        penalty={"240p": 0.01, "480p": 0.008, "640p": 0.004, "1080p": 0.0},
+        chunk_size_mb={r: 0.004 for r in RATIOS})
+    bw = BandwidthTrace.constant(0.0006)  # ~75 kB/s: bandwidth-limited
+    rows: List[Row] = []
+    ttfts = {}
+    outs = {}
+    for name, mode, policy in (("kvfetcher_async", "async", "kvfetcher"),
+                               ("kvfetcher_sync", "sync", "kvfetcher"),
+                               ("fetch_agnostic", "async",
+                                "fetch_agnostic")):
+        eng = LiveEngine(params, cfg, store, policy=policy,
+                         fetch_mode=mode, bandwidth=bw, decode_table=table)
+        r_fetch = eng.submit(full, reuse_prefix=key, reuse_tokens=96,
+                             max_new_tokens=4)
+        r_plain = eng.submit(plain, max_new_tokens=4)
+        eng.run()
+        ttfts[name] = r_fetch.ttft
+        outs[name] = tuple(eng.outputs[r_fetch.rid])
+        rows.append((f"ttft.live.{name}.fetch", r_fetch.ttft * 1e6,
+                     r_fetch.ttft))
+        rows.append((f"ttft.live.{name}.plain", r_plain.ttft * 1e6,
+                     r_plain.ttft))
+    assert outs["kvfetcher_async"] == outs["kvfetcher_sync"], \
+        "async and sync engines must emit identical tokens"
+    rows.append(("ttft.live.speedup_async_vs_sync", 0.0,
+                 ttfts["kvfetcher_sync"] / ttfts["kvfetcher_async"]))
+    return rows
 
 
 def run() -> List[Row]:
@@ -54,4 +116,5 @@ def run() -> List[Row]:
             ours = rows[-1][2]
             rows.append((f"ttft.speedup_vs_cachegen.bw{gbps:g}"
                          f".ctx{ctx // 1000}k", 0.0, base / ours))
+    rows.extend(_live_rows())
     return rows

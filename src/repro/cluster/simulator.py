@@ -2,10 +2,13 @@
 
 The *policy code* under test (fetching-aware scheduler, Alg. 1 adaptive
 resolution, Appx A.3 layer-wise admission) is the production code from
-repro.core — the simulator only supplies clocks: an analytic engine cost
-model (costmodel.py), bandwidth traces (network.py) and decode pools with
-the paper's profiled NVDEC tables (decodepool.py). Compressed chunk sizes
-are driven by ratios measured with the real codec on real KV tensors.
+repro.core — since the async-fetch refactor the whole transmit -> decode
+-> restore pipeline state machine is `repro.core.fetch_controller`, the
+SAME code the live engine pumps; the simulator only supplies clocks: an
+analytic engine cost model (costmodel.py), bandwidth traces (network.py)
+and decode pools with the paper's profiled NVDEC tables (decodepool.py).
+Compressed chunk sizes are driven by ratios measured with the real codec
+on real KV tensors.
 
 Methods modeled (paper §5.1 baselines):
   kvfetcher    video codec (ours), adaptive res, fetch-aware sched,
@@ -22,16 +25,16 @@ Methods modeled (paper §5.1 baselines):
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.adaptive import (BandwidthEstimator, DecodeTable,
-                                 select_resolution)
-from repro.core.pipelining import non_blocking_ok
-from repro.core.scheduler import FetchingAwareScheduler, ReqState, Request
+from repro.core.adaptive import DecodeTable
+from repro.core.fetch import FetchPlan, synthetic_plan
+from repro.core.fetch_controller import (ActiveFetch, FetchController,
+                                         FetchHooks, PipelineConfig)
+from repro.core.scheduler import FetchingAwareScheduler, Request
 from repro.cluster.costmodel import CHIPS, EngineCostModel
 from repro.cluster.decodepool import DecodePool
 from repro.cluster.network import BandwidthTrace
@@ -118,17 +121,48 @@ class SimResult:
         return [r for r in self.requests if not r.needs_fetch]
 
 
-@dataclasses.dataclass
-class _Fetch:
-    req: Request
-    n_chunks: int
-    chunks_done: int = 0
-    next_chunk: int = 0
-    trans_free_at: float = 0.0
-    est: Optional[BandwidthEstimator] = None
-    active_res: Optional[str] = None
-    gpu_decomp_until: float = 0.0
-    chunk_latencies: List[float] = dataclasses.field(default_factory=list)
+class _SimHooks(FetchHooks):
+    """Analytic cost models standing in for the live codec/restore path."""
+
+    def __init__(self, sim: "ServingSimulator"):
+        self.sim = sim
+
+    @staticmethod
+    def _n_tok(pc) -> int:
+        return pc.ref.token_end - pc.ref.token_start
+
+    def chunk_bytes(self, fetch: ActiveFetch, pc, res: str) -> float:
+        return self.sim._chunk_bytes(self._n_tok(pc), res)
+
+    def gpu_decomp_seconds(self, fetch: ActiveFetch, pc) -> float:
+        # throughput is in full-KV tokens/s; one chunk holds only a
+        # (3 layers x 1 kind) share of each token's KV
+        cfg = self.sim.cfg
+        n_attn = sum(1 for k in cfg.layer_kinds() if k == "attn")
+        share = 3.0 / max(2 * n_attn, 1)
+        return (self._n_tok(pc) * share
+                / self.sim.method.gpu_decomp_tokens_per_s)
+
+    def restore_seconds(self, fetch: ActiveFetch, pc) -> float:
+        if self.sim.method.framewise_restoration:
+            return 0.002
+        raw_chunk = self.sim.cfg.kv_bytes_per_token() * self._n_tok(pc)
+        return raw_chunk / (self.sim.cost.chip.hbm_bw * 0.5)
+
+    def buffer_bytes(self, fetch: ActiveFetch, pc) -> float:
+        if self.sim.method.framewise_restoration:
+            frame_bytes = self.sim.cfg.kv_bytes_per_token() / 2 * 64
+            return 2 * frame_bytes  # residual + reference frame
+        return 2.7 * self.sim.cfg.kv_bytes_per_token() * self._n_tok(pc)
+
+    def bulk_buffer_bytes(self, fetch: ActiveFetch) -> float:
+        raw_chunk = self.sim.cfg.kv_bytes_per_token() * min(
+            fetch.req.reuse_tokens, self.sim.chunk_tokens)
+        return 2.7 * raw_chunk
+
+    def comp_times(self, req: Request):
+        return self.sim.cost.layer_comp_times(
+            req.prompt_len - req.reuse_tokens + self.sim.prefill_chunk)
 
 
 class ServingSimulator:
@@ -151,23 +185,20 @@ class ServingSimulator:
         self.prefill_chunk = prefill_chunk
         self.sched = FetchingAwareScheduler(
             method.scheduler_policy, max_running=max_running)
-        self.fetches: Dict[int, _Fetch] = {}
-        self.events: List[Tuple[float, int, Callable[[float], None]]] = []
-        self._eid = 0
-        self.buffer_high_water = 0.0
+        self.ctrl = FetchController(
+            self.sched, bandwidth, table=table, pool=self.pool,
+            config=PipelineConfig(
+                adaptive=method.adaptive,
+                fixed_resolution=method.fixed_resolution,
+                layerwise_admission=method.layerwise_admission,
+                blocking_fetch=method.blocking_fetch,
+                gpu_decomp_tokens_per_s=method.gpu_decomp_tokens_per_s,
+                use_table_sizes=method.use_table_sizes,
+                resolutions=RESOLUTIONS),
+            hooks=_SimHooks(self))
         # per-request engine progress
         self.prefill_remaining: Dict[int, int] = {}
         self.context_done: Dict[int, int] = {}
-
-    # -- event helpers -------------------------------------------------------
-    def _push(self, t: float, fn: Callable[[float], None]) -> None:
-        self._eid += 1
-        heapq.heappush(self.events, (t, self._eid, fn))
-
-    def _drain(self, until: float) -> None:
-        while self.events and self.events[0][0] <= until:
-            t, _, fn = heapq.heappop(self.events)
-            fn(t)
 
     # -- chunk size model ------------------------------------------------------
     def _chunk_bytes(self, n_tokens: int, res: str) -> float:
@@ -180,133 +211,10 @@ class ServingSimulator:
         key = res if res in self.method.ratios else "stream"
         return raw / self.method.ratios[key]
 
-    def _n_chunks(self, reuse_tokens: int) -> int:
-        # one video chunk covers chunk_tokens tokens x 3 layers (K and V):
-        n_groups = max(1, -(-sum(1 for k in self.cfg.layer_kinds()
-                                 if k == "attn") // 3))
-        per_group = max(1, -(-reuse_tokens // self.chunk_tokens))
-        return n_groups * per_group * 2  # k and v
-
-    # -- fetch pipeline ---------------------------------------------------------
-    def _start_fetch(self, req: Request, now: float) -> None:
-        req.fetch_started = now
-        f = _Fetch(req, self._n_chunks(req.reuse_tokens))
-        f.est = BandwidthEstimator(self.bw.bw_at(now))
-        f.trans_free_at = now
-        self.fetches[req.rid] = f
-        if self.method.blocking_fetch:
-            # LMCache: engine idles; model as one bulk transfer + decode
-            total = sum(self._chunk_bytes(self._tokens_of_chunk(f, i),
-                                          self.method.fixed_resolution)
-                        for i in range(f.n_chunks))
-            t_done = self.bw.transmit(total, now)
-            if self.pool:
-                _, t_done = self.pool.decode(self.method.fixed_resolution,
-                                             t_done,
-                                             size_scale=f.n_chunks)
-            self._track_buffer_chunkwise(f)
-            self._push(t_done, lambda t, r=req: self._fetch_done(r, t))
-            return
-        self._send_next_chunk(f, now)
-
-    def _tokens_of_chunk(self, f: _Fetch, i: int) -> int:
-        per_group = max(1, -(-f.req.reuse_tokens // self.chunk_tokens))
-        idx = i % per_group
-        t0 = idx * self.chunk_tokens
-        return max(0, min(f.req.reuse_tokens - t0, self.chunk_tokens))
-
-    def _send_next_chunk(self, f: _Fetch, now: float) -> None:
-        if f.next_chunk >= f.n_chunks:
-            return
-        i = f.next_chunk
-        f.next_chunk += 1
-        n_tok = self._tokens_of_chunk(f, i)
-        if self.method.adaptive and self.table is not None:
-            sizes = (None if self.method.use_table_sizes else
-                     {r: int(self._chunk_bytes(n_tok, r))
-                      for r in RESOLUTIONS})
-            load = self.pool.load_at(now) if self.pool else 0
-            res, _ = select_resolution(f.est.est, load, self.table,
-                                       sizes_bytes=sizes,
-                                       active_resolution=f.active_res)
-        else:
-            res = self.method.fixed_resolution
-        f.active_res = res
-        nbytes = self._chunk_bytes(n_tok, res)
-        t_start = max(now, f.trans_free_at)
-        t_done = self.bw.transmit(nbytes, t_start)
-        f.trans_free_at = t_done
-        f.est.observe(int(nbytes), t_done - t_start)
-
-        def on_transmitted(t: float, f=f, res=res, nbytes=nbytes,
-                           n_tok=n_tok, t_start=t_start):
-            self._on_chunk_transmitted(f, res, nbytes, n_tok, t_start, t)
-
-        self._push(t_done, on_transmitted)
-
-    def _on_chunk_transmitted(self, f: _Fetch, res: str, nbytes: float,
-                              n_tok: int, t_start: float, now: float
-                              ) -> None:
-        # keep the transmission pipe busy
-        self._send_next_chunk(f, now)
-        if self.pool is not None:
-            ref_bytes = self.table.chunk_size_mb[res] * 1e6
-            scale = max(nbytes / ref_bytes, 0.05)
-            _, t_dec = self.pool.decode(res, now, size_scale=scale)
-        elif self.method.gpu_decomp_tokens_per_s:
-            # throughput is in full-KV tokens/s; one chunk holds only a
-            # (3 layers x 1 kind) share of each token's KV
-            n_attn = sum(1 for k in self.cfg.layer_kinds() if k == "attn")
-            share = 3.0 / max(2 * n_attn, 1)
-            dur = n_tok * share / self.method.gpu_decomp_tokens_per_s
-            t_dec = max(now, f.gpu_decomp_until) + dur
-            f.gpu_decomp_until = t_dec
-        else:
-            t_dec = now  # raw: nothing to decode
-        if self.method.framewise_restoration:
-            restore = 0.002
-            frame_bytes = self.cfg.kv_bytes_per_token() / 2 * 64
-            self.buffer_high_water = max(self.buffer_high_water,
-                                         2 * frame_bytes)
-        else:
-            raw_chunk = self.cfg.kv_bytes_per_token() * n_tok
-            restore = raw_chunk / (self.cost.chip.hbm_bw * 0.5)
-            self.buffer_high_water = max(self.buffer_high_water,
-                                         2.7 * raw_chunk)
-        t_done = t_dec + restore
-        f.chunk_latencies.append(t_done - t_start)
-        self._push(t_done, lambda t, f=f: self._on_chunk_restored(f, t))
-
-    def _track_buffer_chunkwise(self, f: _Fetch) -> None:
-        raw_chunk = self.cfg.kv_bytes_per_token() * min(
-            f.req.reuse_tokens, self.chunk_tokens)
-        self.buffer_high_water = max(self.buffer_high_water, 2.7 * raw_chunk)
-
-    def _on_chunk_restored(self, f: _Fetch, now: float) -> None:
-        f.chunks_done += 1
-        req = f.req
-        if f.chunks_done >= f.n_chunks:
-            self._fetch_done(req, now)
-            return
-        if (self.method.layerwise_admission and not req.early_admitted
-                and req.state is ReqState.WAITING_FOR_KV):
-            # estimate remaining per-layer decode and per-layer compute
-            L = self.cfg.num_layers
-            frac = f.chunks_done / f.n_chunks
-            buffered = int(frac * L)
-            rate = (np.mean(f.chunk_latencies[-4:])
-                    if f.chunk_latencies else 1.0)
-            per_layer_dec = rate * f.n_chunks / max(L, 1)
-            dec = [per_layer_dec] * L
-            comp = self.cost.layer_comp_times(req.prompt_len
-                                              - req.reuse_tokens
-                                              + self.prefill_chunk)
-            if non_blocking_ok(dec, comp, buffered):
-                self.sched.notify_early_admissible(req, now)
-
-    def _fetch_done(self, req: Request, now: float) -> None:
-        req.layers_ready = self.cfg.num_layers
-        self.sched.notify_fetch_done(req, now)
+    def _build_plan(self, req: Request) -> FetchPlan:
+        n_attn = sum(1 for k in self.cfg.layer_kinds() if k == "attn")
+        return synthetic_plan(req.rid, req.reuse_tokens, n_attn,
+                              self.chunk_tokens)
 
     # -- main loop ----------------------------------------------------------------
     def run(self, requests: List[Request], max_new_tokens: int = 32,
@@ -318,14 +226,14 @@ class ServingSimulator:
             self.prefill_remaining[req.rid] = req.prompt_len
             self.context_done[req.rid] = 0
         while now < horizon:
-            # admit arrivals and process async events up to `now`
+            # admit arrivals and process pipeline events up to `now`
             while ai < len(arrivals) and arrivals[ai].arrival <= now:
                 r = arrivals[ai]
                 if not self.method.reuse:
                     r.reuse_tokens = 0
                 self.sched.submit(r, r.arrival)
                 ai += 1
-            self._drain(now)
+            self.ctrl.pump(now)
             admitted = self.sched.schedule(now)
             for req in admitted:
                 if req.needs_fetch and self.method.reuse:
@@ -334,7 +242,7 @@ class ServingSimulator:
                         req.prompt_len - req.reuse_tokens, 0)
                     self.context_done[req.rid] = req.reuse_tokens
             for req in self.sched.take_fetches():
-                self._start_fetch(req, now)
+                self.ctrl.start(req, self._build_plan(req), now)
             # engine work for this iteration
             prefills = [r for r in self.sched.running
                         if self.prefill_remaining[r.rid] > 0]
@@ -359,8 +267,9 @@ class ServingSimulator:
             if step == 0.0:
                 # idle: jump to the next event/arrival
                 nxt = []
-                if self.events:
-                    nxt.append(self.events[0][0])
+                t_ev = self.ctrl.next_event_time()
+                if t_ev is not None:
+                    nxt.append(t_ev)
                 if ai < len(arrivals):
                     nxt.append(arrivals[ai].arrival)
                 if not nxt:
@@ -369,7 +278,7 @@ class ServingSimulator:
                 continue
             # CacheGen-style contention while CUDA decompression is active
             decomp_active = any(f.gpu_decomp_until > now
-                                for f in self.fetches.values())
+                                for f in self.ctrl.active.values())
             if decomp_active:
                 step *= (self.method.prefill_slowdown if prefills
                          else self.method.decode_slowdown)
@@ -392,5 +301,6 @@ class ServingSimulator:
                 if self.pool else 0.0)
         return SimResult(requests=arrivals,
                          decode_pool_utilization=util,
-                         decompress_buffer_high_water=self.buffer_high_water,
+                         decompress_buffer_high_water=(
+                             self.ctrl.buffer_high_water),
                          sim_time=now)

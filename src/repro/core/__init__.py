@@ -11,4 +11,7 @@ from repro.core.scheduler import (  # noqa: F401
     FetchingAwareScheduler, ReqState, Request,
 )
 from repro.core.pipelining import max_admission_buffer, non_blocking_ok  # noqa: F401
-from repro.core.fetch import FetchPlan, build_plan  # noqa: F401
+from repro.core.fetch import FetchPlan, build_plan, synthetic_plan  # noqa: F401
+from repro.core.fetch_controller import (  # noqa: F401
+    ActiveFetch, FetchController, FetchHooks, PipelineConfig,
+)

@@ -1,0 +1,324 @@
+"""Event-driven asynchronous fetch controller (paper §3.3, Appx A.3).
+
+One pipeline-state machine drives every in-flight :class:`FetchPlan`
+through explicit transmit -> decode -> restore stages against a virtual
+clock, shared by the live serving engine (`repro.serving.engine`) and the
+cluster simulator (`repro.cluster.simulator`) so the two can never
+diverge.  Per chunk the controller
+
+  * selects the resolution with Alg. 1 (`select_resolution`) from the
+    bandwidth estimate and decode-pool load,
+  * transmits it over a bandwidth trace, keeping the network pipe busy
+    (next chunk starts the moment the previous one lands),
+  * decodes it on the decode pool (or the CacheGen-style serialized GPU
+    decompressor, or instantly for raw transfers), and
+  * fires a restore event, at which the environment hook performs the
+    actual (or modeled) frame-wise restoration.
+
+After every restore the controller re-evaluates the Appx A.3 layer-wise
+condition and, when satisfied, calls
+``scheduler.notify_early_admissible`` so suffix prefill can start while
+later layer groups are still in flight.
+
+Environment differences (real codec work vs. analytic cost models, real
+blob sizes vs. ratio-derived sizes) live behind :class:`FetchHooks`; the
+stage ordering, pipelining, and admission logic are written once here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.adaptive import (BandwidthEstimator, DecodeTable,
+                                 select_resolution)
+from repro.core.fetch import FetchPlan, PlannedChunk
+from repro.core.layout import RESOLUTION_ORDER
+from repro.core.pipelining import non_blocking_ok
+from repro.core.scheduler import ReqState, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Method-level switches of the fetch pipeline."""
+    adaptive: bool = True  # Alg. 1 per-chunk resolution selection
+    fixed_resolution: str = "1080p"
+    # Overlap transmit/decode/restore of successive chunks.  False models
+    # the synchronous baseline: chunk i+1 is not requested until chunk i
+    # is fully restored (the pre-pipelining live-engine behaviour).
+    pipelined: bool = True
+    layerwise_admission: bool = True  # Appx A.3 early admission
+    blocking_fetch: bool = False  # LMCache: one bulk transfer, no overlap
+    gpu_decomp_tokens_per_s: float = 0.0  # CacheGen CUDA decompression
+    use_table_sizes: bool = False  # Appx A.2 table sizes, not real bytes
+    resolutions: Tuple[str, ...] = RESOLUTION_ORDER
+
+
+class FetchHooks:
+    """Environment-specific callbacks; defaults fit real-manifest plans."""
+
+    def chunk_bytes(self, fetch: "ActiveFetch", pc: PlannedChunk,
+                    res: str) -> float:
+        return float(pc.sizes[res])
+
+    def restore_seconds(self, fetch: "ActiveFetch",
+                        pc: PlannedChunk) -> float:
+        return 0.0
+
+    def gpu_decomp_seconds(self, fetch: "ActiveFetch",
+                           pc: PlannedChunk) -> float:
+        return 0.0
+
+    def buffer_bytes(self, fetch: "ActiveFetch",
+                     pc: PlannedChunk) -> float:
+        """Peak decompress-buffer bytes while restoring this chunk."""
+        return 0.0
+
+    def bulk_buffer_bytes(self, fetch: "ActiveFetch") -> float:
+        """Peak buffer for the blocking (non-pipelined bulk) path."""
+        return 0.0
+
+    def on_restored(self, fetch: "ActiveFetch", pc: PlannedChunk,
+                    now: float) -> None:
+        """Perform the actual restoration work (live engine) — or nothing
+        (simulator, where restoration is purely a timing event)."""
+
+    def comp_times(self, req: Request) -> Optional[Sequence[float]]:
+        """Per-layer prefill compute times for the Appx A.3 condition.
+        Returning None disables early admission for this request."""
+        return None
+
+
+@dataclasses.dataclass
+class ActiveFetch:
+    """Controller-side state of one in-flight fetch."""
+    req: Request
+    plan: FetchPlan
+    est: BandwidthEstimator
+    trans_free_at: float
+    active_res: Optional[str] = None
+    gpu_decomp_until: float = 0.0
+    chunk_latencies: List[float] = dataclasses.field(default_factory=list)
+
+
+class FetchController:
+    """Event-driven pipeline over all in-flight fetches.
+
+    ``bandwidth`` must provide ``bw_at(t)`` and ``transmit(nbytes, t0)``
+    (see `repro.cluster.network.BandwidthTrace`); ``pool`` (optional)
+    must provide ``decode(res, t_ready, size_scale)`` and ``load_at(t)``
+    (see `repro.cluster.decodepool.DecodePool`).
+    """
+
+    def __init__(self, sched, bandwidth, *,
+                 table: Optional[DecodeTable] = None,
+                 pool=None,
+                 config: Optional[PipelineConfig] = None,
+                 hooks: Optional[FetchHooks] = None):
+        self.sched = sched
+        self.bw = bandwidth
+        if table is None and pool is not None:
+            table = pool.table  # decode scaling needs the pool's profile
+        self.table = table
+        self.pool = pool
+        self.config = config or PipelineConfig()
+        self.hooks = hooks or FetchHooks()
+        self.active: Dict[int, ActiveFetch] = {}
+        self.now = 0.0
+        self.buffer_high_water = 0.0
+        self._events: List[Tuple[float, int, Callable[[float], None]]] = []
+        self._eid = 0
+
+    # -- event queue --------------------------------------------------------
+    def _push(self, t: float, fn: Callable[[float], None]) -> None:
+        self._eid += 1
+        heapq.heappush(self._events, (t, self._eid, fn))
+
+    def pump(self, until: float) -> None:
+        """Process every pipeline event with timestamp <= ``until``."""
+        while self._events and self._events[0][0] <= until:
+            t, _, fn = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            fn(t)
+
+    def pump_next(self) -> Optional[float]:
+        """Process the single next event; returns its time (None if idle)."""
+        if not self._events:
+            return None
+        t, _, fn = heapq.heappop(self._events)
+        self.now = max(self.now, t)
+        fn(t)
+        return t
+
+    def next_event_time(self) -> Optional[float]:
+        return self._events[0][0] if self._events else None
+
+    def drain(self, plan: FetchPlan) -> float:
+        """Run this plan's pipeline to completion (the ``sync`` mode);
+        returns the completion time on the virtual clock."""
+        t = self.now
+        while not plan.done:
+            nt = self.pump_next()
+            if nt is None:
+                raise RuntimeError(
+                    f"fetch pipeline stalled for rid={plan.rid}")
+            t = nt
+        return t
+
+    @property
+    def busy(self) -> bool:
+        return bool(self._events or self.active)
+
+    # -- fetch lifecycle ----------------------------------------------------
+    def start(self, req: Request, plan: FetchPlan,
+              now: float) -> ActiveFetch:
+        req.fetch_started = now
+        f = ActiveFetch(req, plan, BandwidthEstimator(self.bw.bw_at(now)),
+                        trans_free_at=now)
+        self.active[req.rid] = f
+        if self.config.blocking_fetch:
+            self._start_blocking(f, now)
+        else:
+            self._send_next(f, now)
+        return f
+
+    def _start_blocking(self, f: ActiveFetch, now: float) -> None:
+        """LMCache-style inference-blocking fetch: one bulk transfer of
+        every chunk, bulk decode, chunk-wise restoration buffer."""
+        res = self.config.fixed_resolution
+        total = 0.0
+        for pc in f.plan.chunks:
+            pc.resolution = res
+            pc.t_transmit_start = now
+            total += self._chunk_bytes(f, pc, res)
+        t_done = self.bw.transmit(total, now)
+        if self.pool is not None:
+            _, t_done = self.pool.decode(res, t_done,
+                                         size_scale=len(f.plan.chunks))
+        self.buffer_high_water = max(self.buffer_high_water,
+                                     self.hooks.bulk_buffer_bytes(f))
+
+        def on_bulk_done(t: float, f=f) -> None:
+            for pc in f.plan.chunks:
+                pc.t_transmit_done = pc.t_decode_done = pc.t_restored = t
+                self.hooks.on_restored(f, pc, t)
+            self._finish(f, t)
+
+        self._push(t_done, on_bulk_done)
+
+    # -- per-chunk pipeline -------------------------------------------------
+    def _chunk_bytes(self, f: ActiveFetch, pc: PlannedChunk,
+                     res: str) -> float:
+        if self.config.use_table_sizes and self.table is not None \
+                and res in self.table.chunk_size_mb:
+            return self.table.chunk_size_mb[res] * 1e6
+        return self.hooks.chunk_bytes(f, pc, res)
+
+    def _available_res(self, pc: PlannedChunk) -> Tuple[str, ...]:
+        if pc.sizes:
+            return tuple(r for r in self.config.resolutions
+                         if r in pc.sizes)
+        return self.config.resolutions
+
+    def _choose_resolution(self, f: ActiveFetch, pc: PlannedChunk,
+                           now: float) -> str:
+        avail = self._available_res(pc)
+        if not self.config.adaptive or self.table is None:
+            res = self.config.fixed_resolution
+            if not avail or res in avail:
+                return res
+            # fixed resolution not encoded for this chunk: nearest
+            # available, preferring the next one below
+            want = RESOLUTION_ORDER.index(res)
+            lower = [r for r in avail
+                     if RESOLUTION_ORDER.index(r) <= want]
+            return lower[-1] if lower else avail[0]
+        sizes = (None if self.config.use_table_sizes else
+                 {r: int(self._chunk_bytes(f, pc, r)) for r in avail})
+        load = self.pool.load_at(now) if self.pool else 0
+        res, _ = select_resolution(f.est.est, load, self.table,
+                                   sizes_bytes=sizes,
+                                   active_resolution=f.active_res,
+                                   resolutions=avail)
+        return res
+
+    def _send_next(self, f: ActiveFetch, now: float) -> None:
+        plan = f.plan
+        if plan.next_to_send >= len(plan.chunks):
+            return
+        pc = plan.chunks[plan.next_to_send]
+        plan.next_to_send += 1
+        res = self._choose_resolution(f, pc, now)
+        pc.resolution = res
+        f.active_res = res
+        nbytes = self._chunk_bytes(f, pc, res)
+        t_start = max(now, f.trans_free_at)
+        pc.t_transmit_start = t_start
+        t_done = self.bw.transmit(nbytes, t_start)
+        f.trans_free_at = t_done
+        f.est.observe(int(nbytes), t_done - t_start)
+
+        def on_transmitted(t: float, f=f, pc=pc, nbytes=nbytes,
+                           t_start=t_start) -> None:
+            self._on_transmitted(f, pc, nbytes, t_start, t)
+
+        self._push(t_done, on_transmitted)
+
+    def _on_transmitted(self, f: ActiveFetch, pc: PlannedChunk,
+                        nbytes: float, t_start: float, now: float) -> None:
+        pc.t_transmit_done = now
+        if self.config.pipelined:
+            self._send_next(f, now)  # keep the transmission pipe busy
+        if self.pool is not None:
+            ref = self.table.chunk_size_mb[pc.resolution] * 1e6
+            _, t_dec = self.pool.decode(pc.resolution, now,
+                                        size_scale=max(nbytes / ref, 0.05))
+        elif self.config.gpu_decomp_tokens_per_s:
+            dur = self.hooks.gpu_decomp_seconds(f, pc)
+            t_dec = max(now, f.gpu_decomp_until) + dur
+            f.gpu_decomp_until = t_dec
+        else:
+            t_dec = now  # raw transfer: nothing to decode
+        pc.t_decode_done = t_dec
+        self.buffer_high_water = max(self.buffer_high_water,
+                                     self.hooks.buffer_bytes(f, pc))
+        t_done = t_dec + self.hooks.restore_seconds(f, pc)
+        f.chunk_latencies.append(t_done - t_start)
+        self._push(t_done, lambda t, f=f, pc=pc: self._on_restored(f, pc, t))
+
+    def _on_restored(self, f: ActiveFetch, pc: PlannedChunk,
+                     now: float) -> None:
+        pc.t_restored = now
+        self.hooks.on_restored(f, pc, now)
+        req = f.req
+        req.layers_ready = f.plan.layers_ready()
+        if not self.config.pipelined:
+            self._send_next(f, now)  # serialized: request the next chunk
+        if f.plan.done:
+            self._finish(f, now)
+            return
+        if (self.config.layerwise_admission and not req.early_admitted
+                and req.state is ReqState.WAITING_FOR_KV):
+            self._maybe_admit_early(f, now)
+
+    def _finish(self, f: ActiveFetch, now: float) -> None:
+        f.req.layers_ready = f.plan.layers_ready()
+        self.active.pop(f.req.rid, None)
+        self.sched.notify_fetch_done(f.req, now)
+
+    # -- Appx A.3 layer-wise early admission --------------------------------
+    def _maybe_admit_early(self, f: ActiveFetch, now: float) -> None:
+        comp = self.hooks.comp_times(f.req)
+        if comp is None:
+            return
+        L = len(comp)
+        total = max(f.plan.n_layers_total, 1)
+        buffered = int(round(f.req.layers_ready * L / total))
+        rate = (float(np.mean(f.chunk_latencies[-4:]))
+                if f.chunk_latencies else 1.0)
+        per_layer_dec = rate * len(f.plan.chunks) / max(L, 1)
+        dec = [per_layer_dec] * L
+        if non_blocking_ok(dec, comp, buffered):
+            self.sched.notify_early_admissible(f.req, now)

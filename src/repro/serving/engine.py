@@ -1,10 +1,24 @@
 """Live serving engine: real compute, real codec, real paged memory.
 
 This is the integration proof of the full KVFetcher path on actual small
-models (the timing experiments live in repro.cluster.simulator — here only
-the mechanics are real): fetching-aware scheduling, background fetch with
-frame-wise restoration into paged memory via the Pallas kernel, suffix
-prefill over restored prefix KV, and continuously-batched paged decode.
+models: fetching-aware scheduling, background fetch with frame-wise
+restoration into paged memory via the Pallas kernel, suffix prefill over
+restored prefix KV, and continuously-batched paged decode.
+
+Fetching runs through the event-driven `repro.core.fetch_controller` —
+the same transmit -> decode -> restore pipeline state machine the
+cluster simulator uses.  Two operating modes:
+
+  * wall clock (default, ``bandwidth=None``): fetches complete
+    synchronously at dispatch, timestamps are ``time.monotonic()`` — the
+    original engine behaviour, kept for integration tests.
+  * virtual clock (``bandwidth=`` a BandwidthTrace): network transmit
+    and decode latencies are modeled on a virtual clock while the codec
+    and paged-memory mechanics stay real.  ``fetch_mode="async"`` pumps
+    the controller from ``step()`` so restoration overlaps compute and a
+    request can start suffix prefill while later layer groups are still
+    in flight (Appx A.3 early admission); ``fetch_mode="sync"`` drains
+    the pipeline serially at dispatch — the pre-pipelining baseline.
 """
 from __future__ import annotations
 
@@ -17,11 +31,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.adaptive import DecodeTable
 from repro.core.chunks import KVManifest
 from repro.core.codec import KVCodec
-from repro.core.fetch import build_plan
+from repro.core.fetch import FetchPlan, PlannedChunk, build_plan
+from repro.core.fetch_controller import (ActiveFetch, FetchController,
+                                         FetchHooks, PipelineConfig)
 from repro.core.layout import IntraLayout
 from repro.core.scheduler import FetchingAwareScheduler, ReqState, Request
+from repro.cluster.costmodel import CHIPS, EngineCostModel
+from repro.cluster.decodepool import DecodePool
 from repro.cluster.storage import KVStore
 from repro.models.attention import attend
 from repro.models.common import rms_norm
@@ -36,6 +55,28 @@ class EngineStats:
     restored_tokens: int = 0
     fetched_bytes: int = 0
     steps: int = 0
+    prefill_stall_time: float = 0.0  # virtual time spent waiting for KV
+
+
+class _EngineHooks(FetchHooks):
+    """Real codec restoration driven by the controller's restore events."""
+
+    def __init__(self, engine: "LiveEngine"):
+        self.engine = engine
+
+    def restore_seconds(self, fetch: ActiveFetch, pc: PlannedChunk) -> float:
+        return 0.002  # frame-wise restoration cost (matches the simulator)
+
+    def on_restored(self, fetch: ActiveFetch, pc: PlannedChunk,
+                    now: float) -> None:
+        self.engine._restore_chunk(fetch.req, fetch.plan, pc)
+
+    def comp_times(self, req: Request):
+        eng = self.engine
+        if eng.cost is None:
+            return None
+        suffix = max(req.prompt_len - req.reuse_tokens, 1)
+        return eng.cost.layer_comp_times(suffix)
 
 
 class LiveEngine:
@@ -44,22 +85,46 @@ class LiveEngine:
     def __init__(self, params, cfg: ModelConfig, store: KVStore, *,
                  n_pages: int = 256, page_size: int = 16,
                  policy: str = "kvfetcher", max_running: int = 4,
-                 resolution: str = "240p"):
+                 resolution: str = "240p",
+                 fetch_mode: str = "sync",
+                 bandwidth=None,
+                 decode_table: Optional[DecodeTable] = None,
+                 cost: Optional[EngineCostModel] = None):
+        assert fetch_mode in ("sync", "async")
         self.params = params
         self.cfg = cfg
         self.store = store
         self.cache = PagedKVCache(cfg, n_pages, page_size)
         self.sched = FetchingAwareScheduler(policy, max_running=max_running)
         self.resolution = resolution
+        self.fetch_mode = fetch_mode
         self.stats = EngineStats()
         self.prompts: Dict[int, np.ndarray] = {}
         self.outputs: Dict[int, List[int]] = {}
         self.finished: List[Request] = []
         self._clock = 0.0
+        self.virtual = bandwidth is not None
+        assert self.virtual or fetch_mode == "sync", \
+            "async fetch needs a bandwidth trace (virtual clock)"
+        self.cost = cost
+        self.ctrl: Optional[FetchController] = None
+        if self.virtual:
+            if self.cost is None:
+                self.cost = EngineCostModel(cfg, CHIPS["h20"], 1)
+            pool = DecodePool(decode_table) if decode_table else None
+            self.ctrl = FetchController(
+                self.sched, bandwidth, table=decode_table, pool=pool,
+                config=PipelineConfig(
+                    adaptive=decode_table is not None,
+                    fixed_resolution=resolution,
+                    pipelined=fetch_mode == "async",
+                    layerwise_admission=(fetch_mode == "async"
+                                         and policy == "kvfetcher")),
+                hooks=_EngineHooks(self))
 
-    # -- time: virtual clock advanced by the caller or wall-clock ----------
+    # -- time: virtual clock in modeled-network mode, else wall clock -------
     def now(self) -> float:
-        return time.monotonic()
+        return self._clock if self.virtual else time.monotonic()
 
     # -- intake -------------------------------------------------------------
     def submit(self, tokens: np.ndarray, reuse_prefix: Optional[str] = None,
@@ -73,35 +138,56 @@ class LiveEngine:
         self.sched.submit(req, req.arrival)
         return req
 
-    # -- background fetch (synchronous in live mode; the event-driven
-    #    overlap is exercised by the simulator) ------------------------------
-    def _run_fetch(self, req: Request) -> None:
+    # -- fetch dispatch -------------------------------------------------------
+    def _start_fetch(self, req: Request) -> None:
         man = self.store.lookup(req.prefix)
         assert man is not None, f"prefix {req.prefix} not registered"
-        req.fetch_started = self.now()
         plan = build_plan(req.rid, man)
         self.cache.add_seq(req.rid, req.prompt_len + req.max_new_tokens)
+        if self.ctrl is None:
+            self._run_fetch_wall(req, plan)
+            return
+        self.ctrl.start(req, plan, self.now())
+        if self.fetch_mode == "sync":
+            # blocking baseline: the engine idles until the (serialized)
+            # pipeline finishes; the virtual clock absorbs the whole fetch
+            self._clock = max(self._clock, self.ctrl.drain(plan))
+
+    def _run_fetch_wall(self, req: Request, plan: FetchPlan) -> None:
+        """Original wall-clock behaviour: fetch synchronously, stamping
+        real timestamps (no network model)."""
+        req.fetch_started = self.now()
+        for pc in plan.chunks:
+            pc.resolution = self.resolution
+            pc.t_transmit_start = pc.t_transmit_done = self.now()
+            self._restore_chunk(req, plan, pc)
+            pc.t_decode_done = pc.t_restored = self.now()
+        req.layers_ready = plan.layers_ready()
+        self.sched.notify_fetch_done(req, self.now())
+
+    # -- frame-wise restoration (real codec + paged scatter) -----------------
+    def _restore_chunk(self, req: Request, plan: FetchPlan,
+                       pc: PlannedChunk) -> None:
+        man = plan.manifest
+        assert man is not None
+        res = pc.resolution or self.resolution
+        blob = man.blobs[(pc.ref.chunk_id, res)]
+        self.stats.fetched_bytes += len(blob)
         lay = IntraLayout(self.cfg.num_kv_heads, self.cfg.head_dim,
                           *man.layout)
         codec = KVCodec(self.cfg.num_kv_heads, self.cfg.head_dim, lay)
-        for pc in plan.chunks:
-            blob = man.blobs[(pc.ref.chunk_id, self.resolution)]
-            self.stats.fetched_bytes += len(blob)
-            scales_all = man.scales[pc.ref.kind]
-            for toks, qt in codec.iter_decode_frames(blob):
-                buf = qt.nbytes * 2  # residual + reference frame
-                self.stats.restore_buffer_high_water = max(
-                    self.stats.restore_buffer_high_water, buf)
-                global_toks = toks + pc.ref.token_start
-                for li, layer in enumerate(pc.ref.layers):
-                    self.cache.restore_tokens(
-                        layer, pc.ref.kind, req.rid, global_toks,
-                        jnp.asarray(qt[:, li]),
-                        jnp.asarray(scales_all[layer]))
-                self.stats.restored_tokens += len(toks)
-            pc.t_restored = self.now()
-        req.layers_ready = plan.layers_ready()
-        self.sched.notify_fetch_done(req, self.now())
+        scales_all = man.scales[pc.ref.kind]
+        for toks, qt in codec.iter_decode_frames(blob):
+            buf = qt.nbytes * 2  # residual + reference frame
+            self.stats.restore_buffer_high_water = max(
+                self.stats.restore_buffer_high_water, buf)
+            global_toks = toks + pc.ref.token_start
+            for li, layer in enumerate(pc.ref.layers):
+                self.cache.restore_tokens(
+                    layer, pc.ref.kind, req.rid, global_toks,
+                    jnp.asarray(qt[:, li]),
+                    jnp.asarray(scales_all[layer]))
+            self.stats.restored_tokens += len(toks)
 
     # -- prefill -------------------------------------------------------------
     def _prefill(self, req: Request) -> None:
@@ -119,6 +205,8 @@ class LiveEngine:
             for layer, (k, v) in enumerate(kvs):
                 self.cache.write_prefill(layer, req.rid, k[0], v[0])
             logits = logits[0]
+            if self.virtual:
+                self._clock += self.cost.prefill_time(len(tokens))
         info = self.cache.seqs[req.rid]
         info.context_len = len(tokens)
         nxt = int(jnp.argmax(logits))
@@ -127,9 +215,25 @@ class LiveEngine:
         req.t_first_token = self.now()
         req.token_times.append(req.t_first_token)
 
+    def _await_layer(self, req: Request, layer: int) -> None:
+        """Async mode: block (on the virtual clock) until ``layer``'s
+        prefix KV is restored; pipeline stalls are accounted as stall
+        time — zero whenever the Appx A.3 condition held at admission."""
+        if self.ctrl is None:
+            return
+        while req.fetch_done is None and req.layers_ready <= layer:
+            t = self.ctrl.pump_next()
+            if t is None:
+                raise RuntimeError(
+                    f"rid={req.rid}: layer {layer} KV never arrived")
+            if t > self._clock:
+                self.stats.prefill_stall_time += t - self._clock
+                self._clock = t
+
     def _suffix_prefill(self, req: Request, tokens: np.ndarray) -> jax.Array:
         """Prefill only the non-reused suffix, attending over restored
-        prefix KV gathered from the paged cache."""
+        prefix KV gathered from the paged cache.  Layer k's compute waits
+        for layer k's restore event only (layer-wise pipeline)."""
         cfg = self.cfg
         n_pre = req.reuse_tokens
         suffix = jnp.asarray(tokens[None, n_pre:])
@@ -142,8 +246,11 @@ class LiveEngine:
         bt = np.asarray(info.block_table)
         ps = self.cache.page_size
         rows = bt[np.arange(n_pre) // ps] * ps + np.arange(n_pre) % ps
+        comp = (self.cost.layer_comp_times(s) if self.virtual else
+                [0.0] * cfg.num_layers)
         x = self.params["embed"][suffix]
         for i in range(cfg.num_layers):
+            self._await_layer(req, i)
             lp = paged_model._layer_params(self.params, cfg, i)
             h = rms_norm(x, lp["ln1"], cfg.norm_eps)
             q, k, v = paged_model._qkv(lp["attn"], h, cfg, positions)
@@ -162,15 +269,18 @@ class LiveEngine:
             x = x + jnp.einsum("bshk,hkd->bsd", out, lp["attn"]["wo"])
             h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
             x = x + paged_model._mlp_out(lp, h2, cfg)
+            self._clock += comp[i]
         return lm_logits(self.params, cfg, x[:, -1:, :])[0, 0]
 
     # -- main loop ------------------------------------------------------------
     def step(self) -> bool:
         """One engine iteration. Returns False when idle and done."""
+        if self.ctrl is not None:
+            self.ctrl.pump(self.now())
         now = self.now()
         self.sched.schedule(now)
         for req in self.sched.take_fetches():
-            self._run_fetch(req)  # synchronous in live mode
+            self._start_fetch(req)
             self.sched.schedule(self.now())
         # newly admitted requests need prefill
         for req in list(self.sched.running):
@@ -189,6 +299,10 @@ class LiveEngine:
             logits = paged_model.decode_paged(
                 self.params, self.cfg, toks, positions, self.cache, seq_ids)
             nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            if self.virtual:
+                ctx = float(np.mean([len(self.prompts[r.rid]) + r.tokens_out
+                                     for r in active]))
+                self._clock += self.cost.decode_step_time(len(active), ctx)
             tnow = self.now()
             for i, req in enumerate(active):
                 self.outputs[req.rid].append(int(nxt[i]))
@@ -199,6 +313,15 @@ class LiveEngine:
                 self.sched.finish(req, self.now())
                 self.cache.free_seq(req.rid)
                 self.finished.append(req)
+        # engine idle but fetches in flight: jump the virtual clock to the
+        # next pipeline event so waiting requests make progress
+        if (self.virtual and self.ctrl is not None
+                and not self.sched.running and not active):
+            t = self.ctrl.next_event_time()
+            if t is not None:
+                self._clock = max(self._clock, t)
+                self.ctrl.pump(self._clock)
+                self.sched.schedule(self._clock)
         self.stats.steps += 1
         return bool(self.sched.running or self.sched.waiting
                     or self.sched.waiting_for_kv)

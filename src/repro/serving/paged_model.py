@@ -80,6 +80,17 @@ def prefill_collect_kv(params, cfg: ModelConfig, tokens: jax.Array
     return lm_logits(params, cfg, x[:, -1:, :])[:, 0], kvs
 
 
+def donor_prefix_kv(params, cfg: ModelConfig,
+                    tokens) -> Tuple[np.ndarray, np.ndarray]:
+    """Run the donor prefill and stack per-layer K/V into the
+    [T, L, K, hd] arrays `KVStore.register_prefix` expects."""
+    tokens = np.asarray(tokens)
+    _, kvs = prefill_collect_kv(params, cfg, jnp.asarray(tokens[None]))
+    kv_k = np.stack([np.asarray(k[0]) for k, _ in kvs], axis=1)
+    kv_v = np.stack([np.asarray(v[0]) for _, v in kvs], axis=1)
+    return kv_k, kv_v
+
+
 def decode_paged(params, cfg: ModelConfig, tokens: jax.Array,
                  positions: jax.Array, cache: PagedKVCache,
                  seq_ids: List[int]) -> jax.Array:

@@ -1,0 +1,67 @@
+"""Shared fixtures for the tier-1 suite.
+
+The tiny-model/params/store setup used to be copy-pasted across
+test_live_engine.py and test_system.py (and would have been pasted a
+third time for the fetch-controller suite); it lives here once now.
+Model fixtures are session-scoped: `tf.init_params` and donor prefills
+dominate suite runtime, so every engine test shares one tiny model.
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """Reduced dense GQA config (the paper's model class)."""
+    from repro.configs import get_config, reduce_config
+    return reduce_config(get_config("lwm-7b"))
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    import jax
+    from repro.models import transformer as tf
+    return tf.init_params(tiny_cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="session")
+def donor_kv(tiny_cfg, tiny_params):
+    """Factory: run the donor prefill, return [T, L, K, hd] K and V."""
+    from repro.serving import paged_model
+
+    def _donor(tokens):
+        return paged_model.donor_prefix_kv(tiny_params, tiny_cfg, tokens)
+
+    return _donor
+
+
+@pytest.fixture
+def registered_store(donor_kv):
+    """Factory: KVStore with one registered prefix; returns (store, key)."""
+    from repro.cluster.storage import KVStore
+    from repro.core.chunks import prefix_key
+
+    def _make(prefix_tokens, *, tokens_per_chunk=16,
+              resolutions=("240p",)):
+        kv_k, kv_v = donor_kv(prefix_tokens)
+        store = KVStore()
+        store.register_prefix(prefix_tokens, kv_k, kv_v,
+                              tokens_per_chunk=tokens_per_chunk,
+                              resolutions=resolutions)
+        return store, prefix_key(prefix_tokens)
+
+    return _make
+
+
+@pytest.fixture(scope="session")
+def synthetic_kv():
+    """Factory: random [T, L, H, D] KV pair + token ids (no model)."""
+
+    def _make(T, L, H, D, seed=0):
+        rng = np.random.default_rng(seed)
+        kv_k = rng.standard_normal((T, L, H, D)).astype(np.float32)
+        kv_v = rng.standard_normal((T, L, H, D)).astype(np.float32)
+        toks = rng.integers(0, 1000, T)
+        return kv_k, kv_v, toks
+
+    return _make

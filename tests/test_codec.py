@@ -1,7 +1,8 @@
 """Codec round-trip + layout + entropy tests (unit + property)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import entropy
 from repro.core.codec import KVCodec

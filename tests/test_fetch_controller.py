@@ -1,0 +1,278 @@
+"""Event-driven fetch controller: pipeline invariants at the controller
+level (pure virtual clock, synthetic plans) plus live-engine integration
+of the async path (real model + codec on a virtual clock).
+
+Covers the ISSUE-1 acceptance surface:
+  * per-chunk stage ordering transmit <= decode <= restore,
+  * layer groups become ready front-to-back,
+  * Appx A.3 early admission never stalls compute,
+  * async and sync engines emit identical tokens, async TTFT < sync,
+  * the fetch_agnostic HOL-blocking baseline is unchanged.
+"""
+import numpy as np
+import pytest
+
+from repro.core.adaptive import GBPS, H20_TABLE, DecodeTable
+from repro.core.fetch import synthetic_plan
+from repro.core.fetch_controller import (FetchController, FetchHooks,
+                                         PipelineConfig)
+from repro.core.scheduler import FetchingAwareScheduler, ReqState, Request
+from repro.cluster.decodepool import DecodePool
+from repro.cluster.network import BandwidthTrace
+
+RES = ("240p", "480p", "640p", "1080p")
+
+
+class _RecSched(FetchingAwareScheduler):
+    """Scheduler recording the first early-admission timestamp."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.t_early = None
+
+    def notify_early_admissible(self, req, now):
+        if self.t_early is None:
+            self.t_early = now
+        super().notify_early_admissible(req, now)
+
+
+class _Hooks(FetchHooks):
+    def __init__(self, nbytes=50e6, comp=None, sized=False):
+        self.nbytes = nbytes
+        self.comp = comp
+        self.sized = sized
+
+    def chunk_bytes(self, fetch, pc, res):
+        if self.sized:  # encoded size scales with resolution
+            return H20_TABLE.chunk_size_mb[res] * 1e6 * 0.5
+        return self.nbytes
+
+    def restore_seconds(self, fetch, pc):
+        return 0.002
+
+    def comp_times(self, req):
+        return self.comp
+
+
+def _drive(policy="kvfetcher", *, pipelined=True, adaptive=False,
+           comp=None, gbps=1.0, nbytes=50e6, reuse=30_000, n_layers=9,
+           sized=False):
+    """Submit one fetching request and run its pipeline to completion."""
+    sched = _RecSched(policy, max_running=4)
+    req = Request(rid=0, arrival=0.0, prompt_len=reuse + 2_000,
+                  reuse_tokens=reuse, prefix="p")
+    sched.submit(req, 0.0)
+    sched.schedule(0.0)
+    (fetch_req,) = sched.take_fetches()
+    plan = synthetic_plan(0, reuse, n_layers, 10_000)
+    ctrl = FetchController(
+        sched, BandwidthTrace.constant(gbps),
+        table=H20_TABLE, pool=DecodePool(H20_TABLE),
+        config=PipelineConfig(adaptive=adaptive,
+                              fixed_resolution="1080p",
+                              pipelined=pipelined,
+                              layerwise_admission=comp is not None,
+                              resolutions=RES),
+        hooks=_Hooks(nbytes, comp, sized))
+    ctrl.start(fetch_req, plan, 0.0)
+    ctrl.pump(float("inf"))
+    return sched, req, plan, ctrl
+
+
+# ---------------------------------------------------------------------------
+# controller-level invariants
+# ---------------------------------------------------------------------------
+
+def test_event_ordering_invariants():
+    sched, req, plan, ctrl = _drive()
+    assert plan.done and req.fetch_done is not None
+    for pc in plan.chunks:
+        assert pc.t_transmit_start is not None
+        assert pc.t_transmit_start <= pc.t_transmit_done
+        assert pc.t_transmit_done <= pc.t_decode_done
+        assert pc.t_decode_done <= pc.t_restored
+    # the network pipe carries one chunk at a time
+    by_start = sorted(plan.chunks, key=lambda pc: pc.t_transmit_start)
+    for a, b in zip(by_start, by_start[1:]):
+        assert b.t_transmit_start >= a.t_transmit_done - 1e-9
+    # layer groups become fully restored front-to-back
+    gdone = {}
+    for pc in plan.chunks:
+        gdone[pc.ref.group] = max(gdone.get(pc.ref.group, 0.0),
+                                  pc.t_restored)
+    gs = sorted(gdone)
+    for g1, g2 in zip(gs, gs[1:]):
+        assert gdone[g1] <= gdone[g2] + 1e-9
+    assert req.layers_ready == plan.n_layers_total == 9
+
+
+def test_pipelined_beats_serialized():
+    """Stage overlap (paper §3.3) vs the chunk-serial sync baseline."""
+    *_, plan_p, _ = _drive(pipelined=True)
+    *_, plan_s, _ = _drive(pipelined=False)
+    done_p = max(pc.t_restored for pc in plan_p.chunks)
+    done_s = max(pc.t_restored for pc in plan_s.chunks)
+    assert done_p < done_s
+
+
+def test_early_admission_never_stalls_compute():
+    """When the Appx A.3 condition admits early, every layer's KV is
+    restored no later than that layer's compute could start."""
+    comp = [10.0] * 9
+    sched, req, plan, ctrl = _drive(comp=comp)
+    assert req.early_admitted
+    t0 = sched.t_early
+    assert t0 is not None and t0 < req.fetch_done
+    gdone = {}
+    for pc in plan.chunks:
+        gdone[pc.ref.group] = max(gdone.get(pc.ref.group, 0.0),
+                                  pc.t_restored)
+    layer_group = {}
+    for pc in plan.chunks:
+        for lay in pc.ref.layers:
+            layer_group[lay] = pc.ref.group
+    cum = 0.0
+    for layer in range(plan.n_layers_total):
+        ready = gdone[layer_group[layer]]
+        assert ready <= t0 + cum + 1e-9, \
+            f"layer {layer} KV late: ready={ready} start={t0 + cum}"
+        cum += comp[layer]
+
+
+def test_no_early_admission_when_decode_too_slow():
+    """Tight compute budget: the condition must refuse early admission
+    (the request is only readmitted by fetch completion)."""
+    sched, req, plan, ctrl = _drive(comp=[1e-4] * 9)
+    assert not req.early_admitted
+    assert req.fetch_done is not None
+
+
+def test_adaptive_resolution_reacts_to_bandwidth():
+    def chosen(gbps):
+        *_, plan, _ = _drive(adaptive=True, sized=True, gbps=gbps)
+        res = [pc.resolution for pc in plan.chunks]
+        return max(set(res), key=res.count)
+
+    slow, fast = chosen(1.0), chosen(40.0)
+    assert RES.index(slow) <= RES.index(fast)
+    assert slow == "240p"
+
+
+def test_fetch_agnostic_hol_baseline_unchanged():
+    """The HOL-blocking baseline must survive the controller refactor:
+    a plain request behind a fetching head waits for the whole fetch."""
+    for policy in ("fetch_agnostic", "kvfetcher"):
+        sched = FetchingAwareScheduler(policy, max_running=4)
+        a = Request(rid=0, arrival=0.0, prompt_len=22_000,
+                    reuse_tokens=20_000, prefix="p")
+        b = Request(rid=1, arrival=0.0, prompt_len=1_000)
+        sched.submit(a, 0.0)
+        sched.submit(b, 0.0)
+        admitted0 = sched.schedule(0.0)
+        (fetch_req,) = sched.take_fetches()
+        ctrl = FetchController(
+            sched, BandwidthTrace.constant(1.0),
+            table=H20_TABLE, pool=DecodePool(H20_TABLE),
+            config=PipelineConfig(adaptive=False,
+                                  fixed_resolution="1080p",
+                                  layerwise_admission=False),
+            hooks=_Hooks())
+        ctrl.start(fetch_req, synthetic_plan(0, 20_000, 9, 10_000), 0.0)
+        if policy == "fetch_agnostic":
+            assert admitted0 == []  # head blocks everyone
+            ctrl.pump(float("inf"))
+            admitted = sched.schedule(ctrl.now)
+            assert {r.rid for r in admitted} == {0, 1}
+            assert b.t_admitted >= a.fetch_done
+        else:
+            assert [r.rid for r in admitted0] == [1]  # b runs immediately
+            assert a.state is ReqState.WAITING_FOR_KV
+
+
+# ---------------------------------------------------------------------------
+# live-engine integration (virtual clock, real model + codec)
+# ---------------------------------------------------------------------------
+
+def _live_net(latency=0.04):
+    table = DecodeTable(
+        name="live-test", n_decoders=2,
+        latency={r: (latency, latency * 1.25) for r in RES},
+        penalty={"240p": 0.01, "480p": 0.008, "640p": 0.004, "1080p": 0.0},
+        chunk_size_mb={r: 0.004 for r in RES})
+    return table, BandwidthTrace.constant(0.0006)  # ~75 kB/s
+
+
+@pytest.mark.slow
+def test_async_engine_matches_sync_and_is_faster(tiny_cfg, tiny_params,
+                                                 registered_store):
+    from repro.serving.engine import LiveEngine
+
+    CFG, PARAMS = tiny_cfg, tiny_params
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, CFG.vocab_size, 48)
+    full = np.concatenate([prefix, rng.integers(0, CFG.vocab_size, 8)])
+    plain = rng.integers(0, CFG.vocab_size, 12)
+    store, key = registered_store(prefix,
+                                  resolutions=("240p", "480p", "1080p"))
+    table, bw = _live_net()
+    results = {}
+    for mode in ("async", "sync"):
+        eng = LiveEngine(PARAMS, CFG, store, policy="kvfetcher",
+                         fetch_mode=mode, bandwidth=bw, decode_table=table)
+        r_fetch = eng.submit(full, reuse_prefix=key, reuse_tokens=48,
+                             max_new_tokens=3)
+        r_plain = eng.submit(plain, max_new_tokens=3)
+        eng.run()
+        assert eng.stats.restored_tokens == 48 * 2  # k and v restored
+        results[mode] = (r_fetch, r_plain,
+                         eng.outputs[r_fetch.rid], eng.outputs[r_plain.rid])
+    fa, pa, out_fa, out_pa = results["async"]
+    fs, ps, out_fs, out_ps = results["sync"]
+    # identical generations (lossless at the system level)
+    assert out_fa == out_fs
+    assert out_pa == out_ps
+    # pipelining wins TTFT under a bandwidth-limited trace
+    assert fa.ttft < fs.ttft
+    # fetch-aware async engine never blocks the plain request
+    assert pa.ttft < 0.1 * fa.ttft
+
+
+@pytest.mark.slow
+def test_engine_early_admission_no_stall():
+    """Multi-group tiny model with huge modeled compute: early admission
+    fires (Appx A.3) and suffix prefill never waits for KV."""
+    import jax
+    from repro.configs import get_config, reduce_config
+    from repro.cluster.costmodel import CHIPS, EngineCostModel
+    from repro.cluster.storage import KVStore
+    from repro.core.chunks import prefix_key
+    from repro.models import transformer as tf
+    from repro.serving import paged_model
+    from repro.serving.engine import LiveEngine
+
+    cfg = reduce_config(get_config("lwm-7b"), num_layers=6)  # 2 groups
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(6)
+    prefix = rng.integers(0, cfg.vocab_size, 64)
+    full = np.concatenate([prefix, rng.integers(0, cfg.vocab_size, 6)])
+    kv_k, kv_v = paged_model.donor_prefix_kv(params, cfg, prefix)
+    store = KVStore()
+    key = prefix_key(prefix)
+    store.register_prefix(prefix, kv_k, kv_v, tokens_per_chunk=16,
+                          resolutions=("240p",))
+    table, bw = _live_net(latency=0.001)
+    # absurdly low MFU -> per-layer compute dwarfs decode -> admit early
+    slow_cost = EngineCostModel(cfg, CHIPS["h20"], 1, mfu=1e-12)
+    eng = LiveEngine(params, cfg, store, policy="kvfetcher",
+                     fetch_mode="async", bandwidth=bw, decode_table=table,
+                     cost=slow_cost)
+    req = eng.submit(full, reuse_prefix=key, reuse_tokens=64,
+                     max_new_tokens=2)
+    eng.run()
+    assert req.early_admitted
+    assert eng.stats.prefill_stall_time == 0.0
+    # lossless: same generations as a no-reuse engine on the same model
+    ref = LiveEngine(params, cfg, KVStore())
+    rr = ref.submit(full, max_new_tokens=2)
+    ref.run()
+    assert eng.outputs[req.rid] == ref.outputs[rr.rid]

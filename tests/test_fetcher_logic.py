@@ -2,7 +2,8 @@
 fetching-aware scheduler queue behaviour, fetch plans and manifests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core.adaptive import (
     GBPS, H20_TABLE, L20_TABLE, BandwidthEstimator, select_resolution,

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.kv_restore.ops import kv_restore
 from repro.kernels.paged_attention.ops import paged_attention

@@ -3,36 +3,24 @@
 Covers the paper's "lossless accuracy" property at system level: a request
 whose prefix KV is fetched+restored from the remote store must produce the
 same generations as full prefill (up to the shared int8 quantization step).
+
+Tiny-model fixtures (tiny_cfg / tiny_params / donor_kv / registered_store)
+come from conftest.py.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, reduce_config
 from repro.cluster.storage import KVStore
-from repro.core.chunks import prefix_key
 from repro.models import transformer as tf
 from repro.serving import paged_model
 from repro.serving.engine import LiveEngine
 from repro.paged.cache import PagedKVCache
 
-CFG = reduce_config(get_config("lwm-7b"))
-KEY = jax.random.PRNGKey(0)
-PARAMS = tf.init_params(CFG, KEY)
 
-
-def _donor_kv(tokens):
-    """Run the donor prefill and collect [T, L, K, hd] K and V arrays."""
-    logits, kvs = paged_model.prefill_collect_kv(
-        PARAMS, CFG, jnp.asarray(tokens[None]))
-    k = np.stack([np.asarray(k[0]) for k, _ in kvs], axis=1)
-    v = np.stack([np.asarray(v[0]) for _, v in kvs], axis=1)
-    return k, v  # [T, L, K, hd]
-
-
-def test_paged_decode_matches_dense_decode():
+def test_paged_decode_matches_dense_decode(tiny_cfg, tiny_params):
     """Paged decode path == dense-cache decode path on the same model."""
+    CFG, PARAMS = tiny_cfg, tiny_params
     rng = np.random.default_rng(0)
     tokens = rng.integers(0, CFG.vocab_size, 24)
     cache = PagedKVCache(CFG, n_pages=64, page_size=8)
@@ -58,18 +46,17 @@ def test_paged_decode_matches_dense_decode():
                                rtol=3e-4, atol=3e-4)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("policy", ["kvfetcher", "fetch_agnostic"])
-def test_engine_reuse_matches_full_prefill(policy):
+def test_engine_reuse_matches_full_prefill(policy, tiny_cfg, tiny_params,
+                                           registered_store):
+    CFG, PARAMS = tiny_cfg, tiny_params
     rng = np.random.default_rng(1)
     prefix_tokens = rng.integers(0, CFG.vocab_size, 48)
     suffix_tokens = rng.integers(0, CFG.vocab_size, 8)
     full = np.concatenate([prefix_tokens, suffix_tokens])
 
-    kv_k, kv_v = _donor_kv(prefix_tokens)
-    store = KVStore()
-    key = prefix_key(prefix_tokens)
-    store.register_prefix(prefix_tokens, kv_k, kv_v, tokens_per_chunk=16,
-                          resolutions=("240p",))
+    store, key = registered_store(prefix_tokens)
 
     # engine A: no reuse
     eng_a = LiveEngine(PARAMS, CFG, KVStore(), policy=policy)
@@ -90,15 +77,14 @@ def test_engine_reuse_matches_full_prefill(policy):
     assert eng_b.stats.restore_buffer_high_water < 1_000_000
 
 
-def test_engine_mixed_batch_no_interference():
+@pytest.mark.slow
+def test_engine_mixed_batch_no_interference(tiny_cfg, tiny_params,
+                                            registered_store):
     """A fetching request must not delay non-reuse requests (kvfetcher)."""
+    CFG, PARAMS = tiny_cfg, tiny_params
     rng = np.random.default_rng(2)
     prefix_tokens = rng.integers(0, CFG.vocab_size, 32)
-    kv_k, kv_v = _donor_kv(prefix_tokens)
-    store = KVStore()
-    key = prefix_key(prefix_tokens)
-    store.register_prefix(prefix_tokens, kv_k, kv_v, tokens_per_chunk=16,
-                          resolutions=("240p",))
+    store, key = registered_store(prefix_tokens)
     eng = LiveEngine(PARAMS, CFG, store, policy="kvfetcher", max_running=4)
     rng2 = np.random.default_rng(3)
     r_fetch = eng.submit(np.concatenate([prefix_tokens,

@@ -47,6 +47,7 @@ def test_public_api_imports():
     from repro.core import (  # noqa: F401
         KVCodec, KVManifest, FetchingAwareScheduler, Request,
         encode_prefix, select_resolution, non_blocking_ok, build_plan,
+        FetchController, FetchHooks, PipelineConfig, synthetic_plan,
     )
     from repro.models import transformer  # noqa: F401
     from repro.serving.engine import LiveEngine  # noqa: F401
@@ -56,16 +57,13 @@ def test_public_api_imports():
     from repro.launch.mesh import make_production_mesh  # noqa: F401
 
 
-def test_codec_storage_plan_flow():
+def test_codec_storage_plan_flow(synthetic_kv):
     """Offline registration -> manifest -> fetch plan -> chunk decode."""
     from repro.cluster.storage import KVStore
     from repro.core.chunks import decode_chunk_tokens, prefix_key
     from repro.core.fetch import build_plan
-    rng = np.random.default_rng(0)
     T, L, H, D = 48, 4, 4, 16
-    kv_k = rng.standard_normal((T, L, H, D)).astype(np.float32)
-    kv_v = rng.standard_normal((T, L, H, D)).astype(np.float32)
-    toks = rng.integers(0, 1000, T)
+    kv_k, kv_v, toks = synthetic_kv(T, L, H, D)
     store = KVStore()
     man = store.register_prefix(toks, kv_k, kv_v, tokens_per_chunk=16,
                                 resolutions=("240p",))
