@@ -7,15 +7,24 @@ bench stays fast; see EXPERIMENTS.md for the measured values).
 The ``ttft.live.*`` rows run the REAL engine (real model, real codec,
 real paged memory) on a virtual clock over a bandwidth-limited trace,
 comparing the event-driven async fetch pipeline against the serialized
-sync baseline and the fetch-agnostic (HOL-blocking) scheduler."""
+sync baseline and the fetch-agnostic (HOL-blocking) scheduler.
+
+The ``ttft.wan.*`` rows stress the WAN network model (the paper's
+bandwidth-limited, fluctuating regime): seeded chunk loss with
+retransmission and multi-request contention over a fair-shared link —
+``ttft.wan.sim.*`` sweeps loss rate (1-5%) and contention (2/4/8-way) in
+the analytic simulator; ``ttft.wan.live.*`` runs the real engine under
+2% loss + 4-way contention and checks async beats sync with identical
+output tokens (lossless restore despite retransmits)."""
 from __future__ import annotations
 
+import dataclasses
 from typing import List
 
 from benchmarks.common import Row
 from repro.configs import get_config
 from repro.core.adaptive import H20_TABLE, DecodeTable
-from repro.cluster.network import BandwidthTrace
+from repro.cluster.network import BandwidthTrace, LossModel
 from repro.cluster.simulator import (
     ServingSimulator, cachegen_spec, full_prefill_spec, kvfetcher_spec,
     llm265_spec, lmcache_raw_spec, raw_spec,
@@ -37,9 +46,53 @@ def _ttft(spec, gbps: float, ctx: int) -> float:
     return summarize(reqs)["ttft_mean"]
 
 
-def _live_rows() -> List[Row]:
-    """kvfetcher-async vs kvfetcher-sync vs fetch_agnostic on the live
-    engine, bandwidth-limited (paper §3.3: pipelining is the TTFT win)."""
+def _wan_sim_rows() -> List[Row]:
+    """Analytic WAN sweeps: async-vs-sync pipelines under chunk loss, and
+    TTFT degradation as 2/4/8 concurrent fetches share one link."""
+    rows: List[Row] = []
+    sync = dataclasses.replace(kvfetcher_spec(RATIOS), pipelined=False,
+                               layerwise_admission=False,
+                               name="kvfetcher_sync")
+    for pct in (1, 5):
+        ts = {}
+        for name, spec in (("async", kvfetcher_spec(RATIOS)),
+                           ("sync", sync)):
+            sim = ServingSimulator(
+                CFG, spec, chip="h20", n_chips=2,
+                bandwidth=BandwidthTrace.constant(8.0),
+                loss=LossModel.bernoulli(pct / 100, seed=17),
+                table=H20_TABLE)
+            res = sim.run(fixed_context_trace(50_000, n_requests=3,
+                                              gap=90.0), max_new_tokens=8)
+            ts[name] = summarize(res.fetching())["ttft_mean"]
+            rows.append((f"ttft.wan.sim.loss{pct}.kvfetcher_{name}",
+                         ts[name] * 1e6, ts[name]))
+            if name == "async":
+                rows.append((f"ttft.wan.sim.loss{pct}.retransmits", 0.0,
+                             float(res.retransmits)))
+        rows.append((f"ttft.wan.sim.loss{pct}.speedup_async_vs_sync", 0.0,
+                     ts["sync"] / ts["async"]))
+    for ways in (2, 4, 8):
+        sim = ServingSimulator(CFG, kvfetcher_spec(RATIOS), chip="h20",
+                               n_chips=2,
+                               bandwidth=BandwidthTrace.constant(8.0),
+                               table=H20_TABLE)
+        res = sim.run(fixed_context_trace(50_000, n_requests=ways,
+                                          gap=0.0), max_new_tokens=8)
+        t = summarize(res.fetching())["ttft_mean"]
+        rows.append((f"ttft.wan.sim.c{ways}.kvfetcher", t * 1e6, t))
+    return rows
+
+
+_LIVE_ENV = None
+
+
+def _live_env():
+    """Shared tiny-model environment for the live-engine rows (built once:
+    param init + donor prefill dominate bench wall time)."""
+    global _LIVE_ENV
+    if _LIVE_ENV is not None:
+        return _LIVE_ENV
     import jax
     import numpy as np
 
@@ -48,7 +101,6 @@ def _live_rows() -> List[Row]:
     from repro.core.chunks import prefix_key
     from repro.models import transformer as tf
     from repro.serving import paged_model
-    from repro.serving.engine import LiveEngine
 
     cfg = reduce_config(get_config("lwm-7b"))
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
@@ -68,6 +120,20 @@ def _live_rows() -> List[Row]:
         penalty={"240p": 0.01, "480p": 0.008, "640p": 0.004, "1080p": 0.0},
         chunk_size_mb={r: 0.004 for r in RATIOS})
     bw = BandwidthTrace.constant(0.0006)  # ~75 kB/s: bandwidth-limited
+    _LIVE_ENV = dict(cfg=cfg, params=params, store=store, key=key,
+                     table=table, bw=bw, full=full, plain=plain, rng=rng)
+    return _LIVE_ENV
+
+
+def _live_rows() -> List[Row]:
+    """kvfetcher-async vs kvfetcher-sync vs fetch_agnostic on the live
+    engine, bandwidth-limited (paper §3.3: pipelining is the TTFT win)."""
+    from repro.serving.engine import LiveEngine
+
+    env = _live_env()
+    cfg, params, store = env["cfg"], env["params"], env["store"]
+    key, table, bw = env["key"], env["table"], env["bw"]
+    full, plain = env["full"], env["plain"]
     rows: List[Row] = []
     ttfts = {}
     outs = {}
@@ -94,6 +160,50 @@ def _live_rows() -> List[Row]:
     return rows
 
 
+def _wan_live_rows() -> List[Row]:
+    """Real engine under WAN conditions: 2% seeded chunk loss + 4-way
+    fetch contention over one fair-shared link.  Acceptance: async TTFT
+    beats the serialized sync baseline and every request's generation is
+    identical between the two runs (restoration is lossless — loss only
+    moves timing, retransmission recovers every chunk)."""
+    from repro.serving.engine import LiveEngine
+
+    env = _live_env()
+    cfg, params, store = env["cfg"], env["params"], env["store"]
+    key, table, bw = env["key"], env["table"], env["bw"]
+    full = env["full"]
+    rows: List[Row] = []
+    ttfts, outs, retx = {}, {}, {}
+    for mode in ("async", "sync"):
+        # fresh seeded loss per run: identical drop schedule both modes
+        # (seed chosen so 2% loss actually drops chunks on this plan size)
+        loss = LossModel.bernoulli(0.02, seed=16)
+        eng = LiveEngine(params, cfg, store, policy="kvfetcher",
+                         fetch_mode=mode, bandwidth=bw, loss=loss,
+                         link_policy="fair", decode_table=table,
+                         max_running=8)
+        reqs = [eng.submit(full, reuse_prefix=key, reuse_tokens=96,
+                           max_new_tokens=4) for _ in range(4)]
+        eng.run()
+        ts = [r.ttft for r in reqs]
+        ttfts[mode] = sum(ts) / len(ts)
+        outs[mode] = [tuple(eng.outputs[r.rid]) for r in reqs]
+        retx[mode] = eng.ctrl.retransmits_total
+        rows.append((f"ttft.wan.live.loss2.c4.kvfetcher_{mode}.fetch",
+                     ttfts[mode] * 1e6, ttfts[mode]))
+        rows.append((f"ttft.wan.live.loss2.c4.{mode}.retransmits", 0.0,
+                     float(retx[mode])))
+    assert outs["async"] == outs["sync"], \
+        "WAN async and sync engines must emit identical tokens"
+    assert ttfts["async"] < ttfts["sync"], \
+        "async must beat sync under loss + contention"
+    assert retx["async"] > 0, \
+        "2% loss drew no drops: restore-despite-retransmit untested"
+    rows.append(("ttft.wan.live.speedup_async_vs_sync", 0.0,
+                 ttfts["sync"] / ttfts["async"]))
+    return rows
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     methods = {
@@ -116,5 +226,7 @@ def run() -> List[Row]:
             ours = rows[-1][2]
             rows.append((f"ttft.speedup_vs_cachegen.bw{gbps:g}"
                          f".ctx{ctx // 1000}k", 0.0, base / ours))
+    rows.extend(_wan_sim_rows())
     rows.extend(_live_rows())
+    rows.extend(_wan_live_rows())
     return rows

@@ -7,6 +7,14 @@ paged memory, then prefill only their suffixes. Generations are compared
 against full prefill to demonstrate losslessness, and the fetching-aware
 scheduler serves non-reuse requests without HOL blocking.
 
+This demo runs the wall-clock engine (fetches complete at dispatch — no
+network model).  To serve over the WAN model instead, construct the
+engine with ``bandwidth=BandwidthTrace(...)``, ``fetch_mode="async"``,
+and optionally ``loss=LossModel.bernoulli(...)`` / ``link_policy="drr"``
+(see docs/fetch_pipeline.md and the ``ttft.wan.*`` rows of
+benchmarks/bench_ttft.py); a streaming per-token client view is still an
+open ROADMAP item.
+
     PYTHONPATH=src python examples/serve_reuse.py
 """
 import time

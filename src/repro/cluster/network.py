@@ -1,30 +1,60 @@
-"""Network model: piecewise-constant bandwidth traces with jitter.
+"""Network model: bandwidth traces, chunk loss, and shared-link arbitration.
 
-Transmission times integrate the trace exactly, so adaptive-resolution
-decisions see realistic partial-chunk bandwidth shifts (paper Fig. 17).
+Three layers, composed bottom-up into the WAN model the fetch pipeline
+runs against (ROADMAP "WAN scenarios"; LMCache / KV-offloading analyses
+show loss and contention, not raw bandwidth, dominate tail TTFT):
+
+  * :class:`BandwidthTrace` — piecewise-constant link capacity over time.
+    Transmission times integrate the trace exactly, so adaptive-resolution
+    decisions see realistic partial-chunk bandwidth shifts (paper Fig. 17).
+  * :class:`LossModel` — per-chunk-attempt drop decisions: independent
+    Bernoulli, bursty Gilbert-Elliott, or a scripted drop set for tests.
+    Decisions are keyed on ``(flow, chunk, attempt)`` so a seeded model
+    produces the *same* drop schedule in the analytic simulator and the
+    virtual-clock live engine regardless of event interleaving.
+  * :class:`SharedLink` — splits one trace across concurrent fetch flows
+    (``fair`` weighted fluid sharing or ``drr`` deficit-round-robin chunk
+    interleaving), replacing the old model where every in-flight fetch
+    silently got the full trace bandwidth.
+
+Units
+-----
+Internally everything is **bytes/sec** and **seconds**.  All public
+constructors take link rates in **Gbps** (``GBPS`` converts: 1 Gbps ==
+1e9/8 bytes/sec); ``repr`` shows Gbps so printed traces are readable.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
+#: bytes/sec per Gbps (all internal rates are bytes/sec).
 GBPS = 1e9 / 8.0
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(repr=False)
 class BandwidthTrace:
-    times: np.ndarray  # [n] segment start times, times[0] == 0
-    bps: np.ndarray  # [n] bytes/sec in each segment
+    """Piecewise-constant link capacity.
+
+    ``times`` holds segment start times in **seconds** (``times[0] == 0``);
+    ``bps`` holds the capacity of each segment in **bytes/sec** (note: not
+    bits — use :data:`GBPS` or the constructors, which take Gbps).
+    """
+
+    times: np.ndarray  # [n] segment start times (s), times[0] == 0
+    bps: np.ndarray  # [n] capacity in each segment (bytes/sec)
 
     @staticmethod
     def constant(gbps: float) -> "BandwidthTrace":
+        """Flat trace at ``gbps`` gigabits/sec (stored as bytes/sec)."""
         return BandwidthTrace(np.array([0.0]), np.array([gbps * GBPS]))
 
     @staticmethod
     def steps(segs: Sequence[Tuple[float, float]]) -> "BandwidthTrace":
-        """segs: [(t_start, gbps), ...] with t_start ascending from 0."""
+        """``segs``: [(t_start_seconds, gbps), ...], t_start ascending
+        from 0.  Rates are gigabits/sec at this constructor boundary."""
         t = np.array([s[0] for s in segs], np.float64)
         b = np.array([s[1] * GBPS for s in segs], np.float64)
         assert t[0] == 0.0
@@ -35,17 +65,41 @@ class BandwidthTrace:
                  duration: float, seg_len: float = 2.0,
                  rel_std: float = 0.35,
                  floor_frac: float = 0.25) -> "BandwidthTrace":
+        """Random-walk-free jitter: one i.i.d. normal multiplier per
+        ``seg_len``-second segment.
+
+        ``base_gbps`` is gigabits/sec; each segment's rate is
+        ``base_gbps * m`` with ``m ~ N(1, rel_std)`` clipped to
+        ``[floor_frac, 2.5]`` — so the realized *mean* rate can sit
+        slightly above ``base_gbps`` when ``rel_std`` is large (the clip
+        is asymmetric).  The trace covers ``[0, duration]`` and holds the
+        last segment's rate forever after.
+        """
         n = max(2, int(duration / seg_len) + 1)
         mult = np.clip(rng.normal(1.0, rel_std, n), floor_frac, 2.5)
         return BandwidthTrace(np.arange(n) * seg_len,
                               base_gbps * GBPS * mult)
 
+    def __repr__(self) -> str:  # Gbps, not raw bytes/sec
+        g = self.bps / GBPS
+        if len(g) == 1:
+            return f"BandwidthTrace({g[0]:g} Gbps)"
+        return (f"BandwidthTrace({len(g)} segs, "
+                f"{g[0]:g}->{g[-1]:g} Gbps, mean {g.mean():.3g} Gbps)")
+
     def bw_at(self, t: float) -> float:
+        """Capacity at time ``t`` (seconds) in **bytes/sec**."""
         i = int(np.searchsorted(self.times, t, side="right") - 1)
         return float(self.bps[max(i, 0)])
 
+    def next_change(self, t: float) -> float:
+        """First segment boundary strictly after ``t`` (inf if none)."""
+        i = int(np.searchsorted(self.times, t, side="right"))
+        return float(self.times[i]) if i < len(self.times) else float("inf")
+
     def transmit(self, nbytes: float, t0: float) -> float:
-        """Finish time of an nbytes transfer starting at t0."""
+        """Finish time (seconds) of an ``nbytes``-byte transfer starting
+        at ``t0``, integrating the trace exactly."""
         remaining = float(nbytes)
         t = t0
         i = int(np.searchsorted(self.times, t0, side="right") - 1)
@@ -60,3 +114,342 @@ class BandwidthTrace:
             remaining -= (seg_end - t) * bw
             t = seg_end
             i += 1
+
+
+# ---------------------------------------------------------------------------
+# Chunk loss
+# ---------------------------------------------------------------------------
+
+
+class LossModel:
+    """Per-chunk-attempt drop decisions for the WAN scenarios.
+
+    Every transmission attempt of every chunk asks :meth:`dropped` once.
+    Draws are keyed on ``(seed, flow, chunk_seq, attempt)`` — *not* on
+    global call order — so the same seeded model replays the identical
+    drop schedule in the analytic simulator and the virtual-clock live
+    engine even though their event interleavings differ.  The decided
+    schedule is recorded in :attr:`drops` as ``(flow, chunk_seq,
+    attempt)`` triples.
+
+    Modes
+    -----
+    ``bernoulli``        i.i.d. loss with probability ``p`` per attempt.
+    ``gilbert_elliott``  two-state burst-loss chain (good/bad states with
+                         per-state loss rates); the chain advances once
+                         per attempt *per flow*, so burst structure is
+                         deterministic given the per-flow attempt order
+                         (which the controller serializes).
+    ``scripted``         an explicit drop set, for tests and docs.
+    """
+
+    def __init__(self, mode: str, seed: int = 0, *, p: float = 0.0,
+                 good_to_bad: float = 0.05, bad_to_good: float = 0.25,
+                 p_good: float = 0.001, p_bad: float = 0.5,
+                 script: Optional[Set[Tuple[int, int, int]]] = None):
+        assert mode in ("bernoulli", "gilbert_elliott", "scripted")
+        self.mode = mode
+        self.seed = seed
+        self.p = p
+        self.good_to_bad = good_to_bad
+        self.bad_to_good = bad_to_good
+        self.p_good = p_good
+        self.p_bad = p_bad
+        self.script = script or set()
+        self.drops: List[Tuple[int, int, int]] = []  # decided drop schedule
+        self.attempts = 0
+        self._ge_state: Dict[int, bool] = {}  # flow -> in bad state?
+        self._ge_step: Dict[int, int] = {}  # flow -> chain step counter
+
+    # -- constructors -------------------------------------------------------
+    @staticmethod
+    def bernoulli(p: float, seed: int = 0) -> "LossModel":
+        """Independent per-attempt loss with probability ``p``."""
+        return LossModel("bernoulli", seed, p=p)
+
+    @staticmethod
+    def gilbert_elliott(seed: int = 0, *, good_to_bad: float = 0.05,
+                        bad_to_good: float = 0.25, p_good: float = 0.001,
+                        p_bad: float = 0.5) -> "LossModel":
+        """Bursty loss: a per-flow good/bad Markov chain advanced once per
+        attempt; losses are drawn at ``p_good``/``p_bad`` by state."""
+        return LossModel("gilbert_elliott", seed, good_to_bad=good_to_bad,
+                         bad_to_good=bad_to_good, p_good=p_good,
+                         p_bad=p_bad)
+
+    @staticmethod
+    def scripted(drops: Set[Tuple[int, int, int]]) -> "LossModel":
+        """Drop exactly the given ``(flow, chunk_seq, attempt)`` triples."""
+        return LossModel("scripted", script=set(drops))
+
+    # -- queries ------------------------------------------------------------
+    def _draw(self, flow: int, seq: int, attempt: int) -> float:
+        rng = np.random.default_rng(
+            (self.seed, int(flow), int(seq), int(attempt)))
+        return float(rng.random())
+
+    def dropped(self, flow: int, seq: int, attempt: int) -> bool:
+        """Decide (and record) whether this transmission attempt is lost."""
+        self.attempts += 1
+        if self.mode == "scripted":
+            lost = (flow, seq, attempt) in self.script
+        elif self.mode == "bernoulli":
+            lost = self._draw(flow, seq, attempt) < self.p
+        else:  # gilbert_elliott: advance this flow's chain one step
+            step = self._ge_step.get(flow, 0)
+            self._ge_step[flow] = step + 1
+            rng = np.random.default_rng((self.seed, int(flow), step))
+            u_state, u_loss = rng.random(2)
+            bad = self._ge_state.get(flow, False)
+            bad = (u_state >= self.bad_to_good) if bad else \
+                (u_state < self.good_to_bad)
+            self._ge_state[flow] = bad
+            lost = u_loss < (self.p_bad if bad else self.p_good)
+        if lost:
+            self.drops.append((flow, seq, attempt))
+        return lost
+
+    def mean_loss_rate(self) -> float:
+        """Stationary per-attempt loss probability (for bulk-transfer
+        baselines that model loss as a goodput haircut)."""
+        if self.mode == "bernoulli":
+            return self.p
+        if self.mode == "gilbert_elliott":
+            denom = self.good_to_bad + self.bad_to_good
+            frac_bad = self.good_to_bad / denom if denom else 0.0
+            return frac_bad * self.p_bad + (1 - frac_bad) * self.p_good
+        return 0.0
+
+
+# ---------------------------------------------------------------------------
+# Shared-link arbitration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Xfer:
+    flow: int
+    nbytes: float
+    left: float
+    t_ready: float
+    cb: Callable[[float], None]  # called with the finish time
+
+
+class SharedLink:
+    """Splits one :class:`BandwidthTrace` across concurrent fetch flows.
+
+    The fetch controller binds its event queue via :meth:`bind` and then
+    submits chunk transfers with :meth:`submit`; the link schedules each
+    transfer's completion event itself (re-timing in-flight transfers as
+    flows join and leave), so both hook environments see the identical
+    contention model.
+
+    Policies
+    --------
+    ``fair``  weighted fluid (processor-sharing) model: at any instant
+              every active flow receives ``weight / total_active_weight``
+              of the trace capacity, split evenly over that flow's
+              in-flight transfers (a flow retransmitting while its next
+              chunk streams does not get a double share).
+    ``drr``   deficit round robin at chunk granularity: the wire carries
+              one chunk at a time at full trace rate; queued chunks are
+              served in round-robin order with per-flow deficit counters,
+              so a weight-2 flow gets ~2x the bytes of a weight-1 flow
+              while both are backlogged.
+
+    A single-flow ``fair`` link degenerates to the bare trace, so wrapping
+    a dedicated link in :class:`SharedLink` changes nothing — which is why
+    :func:`make_link` always wraps.
+    """
+
+    #: DRR service quantum added per round-robin visit (bytes).
+    DRR_QUANTUM = 4e6
+
+    def __init__(self, trace: BandwidthTrace, policy: str = "fair",
+                 loss: Optional[LossModel] = None):
+        assert policy in ("fair", "drr"), policy
+        self.trace = trace
+        self.policy = policy
+        self.loss = loss
+        self._push: Optional[Callable[[float, Callable], None]] = None
+        self._weights: Dict[int, float] = {}
+        # fair-mode state: fluid frontier + in-flight transfers
+        self._xfers: List[_Xfer] = []
+        self._t = 0.0
+        self._epoch = 0
+        # drr-mode state
+        self._queue: List[_Xfer] = []
+        self._order: List[int] = []  # round-robin flow order
+        self._rr = 0
+        self._deficit: Dict[int, float] = {}
+        self._serving: Optional[_Xfer] = None
+        self._busy_until = 0.0
+
+    def __repr__(self) -> str:
+        return (f"SharedLink({self.policy}, {len(self._weights)} flows, "
+                f"{self.trace!r})")
+
+    # -- controller wiring --------------------------------------------------
+    def bind(self, push: Callable[[float, Callable], None]) -> None:
+        """Receive the controller's event-queue ``push(t, fn)`` handle."""
+        self._push = push
+
+    def open_flow(self, flow: int, weight: float = 1.0) -> None:
+        self._weights[flow] = float(weight)
+        if flow not in self._order:
+            self._order.append(flow)
+            self._deficit.setdefault(flow, 0.0)
+
+    def close_flow(self, flow: int) -> None:
+        self._weights.pop(flow, None)
+        busy = ((self._serving is not None and self._serving.flow == flow)
+                or any(x.flow == flow for x in self._queue))
+        if flow in self._order and not busy:
+            i = self._order.index(flow)
+            self._order.remove(flow)
+            if self._rr > i:
+                self._rr -= 1
+            if self._order:
+                self._rr %= len(self._order)
+            self._deficit.pop(flow, None)
+
+    # -- trace passthrough (estimator seeding; bulk blocking baseline) ------
+    def bw_at(self, t: float) -> float:
+        """Full-trace capacity at ``t`` in bytes/sec (flow shares are a
+        runtime property; estimators learn them from observed chunks)."""
+        return self.trace.bw_at(t)
+
+    def transmit(self, nbytes: float, t0: float) -> float:
+        """Unarbitrated bulk transfer occupying the whole trace: the
+        inference-blocking (LMCache-style) baseline path."""
+        return self.trace.transmit(nbytes, t0)
+
+    # -- arbitrated submission ----------------------------------------------
+    def submit(self, flow: int, nbytes: float, t0: float,
+               cb: Callable[[float], None]) -> None:
+        """Start an ``nbytes`` chunk transfer for ``flow`` at ``t0``;
+        ``cb(t_done)`` fires from the controller's event queue when the
+        wire transfer completes under the arbitration policy."""
+        assert self._push is not None, "SharedLink.bind() not called"
+        x = _Xfer(flow, float(nbytes), float(nbytes), t0, cb)
+        if self.policy == "fair":
+            self._advance(t0)
+            self._xfers.append(x)
+            self._reschedule()
+        else:
+            self._queue.append(x)
+            if self._serving is None:
+                self._dispatch(max(t0, self._busy_until))
+
+    # -- fair: fluid weighted processor sharing -----------------------------
+    def _shares(self) -> Dict[int, float]:
+        per_flow: Dict[int, int] = {}
+        for x in self._xfers:
+            per_flow[x.flow] = per_flow.get(x.flow, 0) + 1
+        W = sum(self._weights.get(f, 1.0) for f in per_flow)
+        return {id(x): self._weights.get(x.flow, 1.0) / W
+                / per_flow[x.flow] for x in self._xfers}
+
+    def _advance(self, t: float) -> None:
+        """Drain in-flight bytes at the current shares up to time ``t``."""
+        while self._xfers and self._t < t:
+            shares = self._shares()
+            step = min(t, self.trace.next_change(self._t))
+            bw = self.trace.bw_at(self._t)
+            dt = step - self._t
+            for x in self._xfers:
+                x.left -= bw * shares[id(x)] * dt
+            self._t = step
+        self._t = max(self._t, t)
+
+    def _reschedule(self) -> None:
+        """Push a (possibly superseding) event at the earliest projected
+        completion; stale events are ignored via the epoch counter."""
+        self._epoch += 1
+        if not self._xfers:
+            return
+        shares = self._shares()
+        t_next = min(self.trace.transmit(max(x.left, 0.0) / shares[id(x)],
+                                         self._t) for x in self._xfers)
+        ep = self._epoch
+        self._push(t_next, lambda t: self._tick(t, ep))
+
+    @staticmethod
+    def _drained(x: _Xfer) -> bool:
+        # relative tolerance: integration error scales with transfer size
+        return x.left <= 1e-6 + 1e-9 * x.nbytes
+
+    def _tick(self, t: float, epoch: int) -> None:
+        if epoch != self._epoch:
+            return  # superseded by a later join/leave
+        self._advance(t)
+        done = [x for x in self._xfers if self._drained(x)]
+        if not done and self._xfers:
+            # numerical guard: if the earliest projected completion can no
+            # longer advance the clock, the residue is pure float error —
+            # force-complete it instead of ticking forever at time t
+            shares = self._shares()
+            nxt = min(self._xfers,
+                      key=lambda x: self.trace.transmit(
+                          x.left / shares[id(x)], t))
+            if self.trace.transmit(nxt.left / shares[id(nxt)],
+                                   t) <= t + 1e-9 * max(t, 1.0):
+                nxt.left = 0.0
+                done = [nxt]
+        self._xfers = [x for x in self._xfers if x not in done]
+        for x in done:
+            x.cb(t)
+        self._reschedule()
+
+    # -- drr: serialized wire, deficit-round-robin chunk interleave ---------
+    def _dispatch(self, t: float) -> None:
+        backlogged = {x.flow for x in self._queue}
+        if not backlogged:
+            return
+        while True:
+            flow = self._order[self._rr]
+            self._rr = (self._rr + 1) % len(self._order)
+            if flow not in backlogged:
+                continue
+            self._deficit[flow] = self._deficit.get(flow, 0.0) + \
+                self.DRR_QUANTUM * self._weights.get(flow, 1.0)
+            head = next(x for x in self._queue if x.flow == flow)
+            if self._deficit[flow] < head.nbytes:
+                continue
+            self._deficit[flow] -= head.nbytes
+            self._queue.remove(head)
+            if not any(x.flow == flow for x in self._queue):
+                self._deficit[flow] = 0.0  # no banking credit while idle
+            t_start = max(t, head.t_ready)
+            t_done = self.trace.transmit(head.nbytes, t_start)
+            self._serving = head
+            self._busy_until = t_done
+            self._push(t_done, lambda tt, h=head: self._drr_done(h, tt))
+            return
+
+    def _drr_done(self, x: _Xfer, t: float) -> None:
+        self._serving = None
+        x.cb(t)  # may submit the flow's next chunk synchronously
+        if self._serving is None and self._queue:
+            self._dispatch(max(t, self._busy_until))
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._xfers) + len(self._queue) + \
+            (1 if self._serving is not None else 0)
+
+
+def make_link(bandwidth, policy: Optional[str] = None,
+              loss: Optional[LossModel] = None) -> SharedLink:
+    """Wrap a :class:`BandwidthTrace` (or anything exposing ``bw_at`` /
+    ``transmit``) into a :class:`SharedLink`; pass an existing link
+    through unchanged (asserting no conflicting loss/policy request).
+    ``policy=None`` means "caller doesn't care": bare traces get
+    ``fair``, existing links keep whatever they were built with."""
+    if isinstance(bandwidth, SharedLink):
+        assert loss is None or bandwidth.loss is loss, \
+            "conflicting LossModel for an already-built SharedLink"
+        assert policy is None or bandwidth.policy == policy, \
+            f"link is {bandwidth.policy!r}, caller asked for {policy!r}"
+        return bandwidth
+    return SharedLink(bandwidth, policy=policy or "fair", loss=loss)

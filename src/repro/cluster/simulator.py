@@ -5,8 +5,10 @@ resolution, Appx A.3 layer-wise admission) is the production code from
 repro.core — since the async-fetch refactor the whole transmit -> decode
 -> restore pipeline state machine is `repro.core.fetch_controller`, the
 SAME code the live engine pumps; the simulator only supplies clocks: an
-analytic engine cost model (costmodel.py), bandwidth traces (network.py)
-and decode pools with the paper's profiled NVDEC tables (decodepool.py).
+analytic engine cost model (costmodel.py), a WAN link model — bandwidth
+traces shared across concurrent fetches by a fair/DRR arbiter, with
+optional seeded chunk loss and retransmission (network.py) — and decode
+pools with the paper's profiled NVDEC tables (decodepool.py).
 Compressed chunk sizes are driven by ratios measured with the real codec
 on real KV tensors.
 
@@ -37,7 +39,7 @@ from repro.core.fetch_controller import (ActiveFetch, FetchController,
 from repro.core.scheduler import FetchingAwareScheduler, Request
 from repro.cluster.costmodel import CHIPS, EngineCostModel
 from repro.cluster.decodepool import DecodePool
-from repro.cluster.network import BandwidthTrace
+from repro.cluster.network import BandwidthTrace, LossModel, make_link
 
 RESOLUTIONS = ("240p", "480p", "640p", "1080p")
 
@@ -59,6 +61,9 @@ class MethodSpec:
     layerwise_admission: bool = False
     framewise_restoration: bool = True
     blocking_fetch: bool = False  # LMCache: engine idles during fetch
+    # False models the chunk-serial sync baseline (chunk i+1 waits for
+    # chunk i's restore) — the WAN async-vs-sync comparisons flip this.
+    pipelined: bool = True
     # Reproduce the paper's own chunk-size operating point (Appx A.2
     # tables: 180-256 MB per chunk) instead of deriving sizes from the
     # measured compression ratio. Used by the Fig. 17/23 experiments.
@@ -113,6 +118,7 @@ class SimResult:
     decode_pool_utilization: float
     decompress_buffer_high_water: float
     sim_time: float
+    retransmits: int = 0  # chunk attempts resent due to WAN loss
 
     def fetching(self) -> List[Request]:
         return [r for r in self.requests if r.needs_fetch]
@@ -169,6 +175,8 @@ class ServingSimulator:
     def __init__(self, cfg: ModelConfig, method: MethodSpec, *,
                  chip: str = "h20", n_chips: int = 2,
                  bandwidth: BandwidthTrace,
+                 loss: Optional[LossModel] = None,
+                 link_policy: Optional[str] = None,  # None -> "fair"
                  table: Optional[DecodeTable] = None,
                  chunk_tokens: int = 10_000,
                  prefill_chunk: int = 2048,
@@ -177,7 +185,10 @@ class ServingSimulator:
         self.cfg = cfg
         self.method = method
         self.cost = EngineCostModel(cfg, CHIPS[chip], n_chips, mfu=mfu)
-        self.bw = bandwidth
+        # concurrent fetches share (and contend for) one WAN link; chunks
+        # may additionally be dropped by the loss model and retransmitted
+        self.link = make_link(bandwidth, policy=link_policy, loss=loss)
+        self.bw = self.link.trace
         self.table = table
         self.pool = DecodePool(table) if (table and
                                           method.uses_decode_pool) else None
@@ -186,10 +197,11 @@ class ServingSimulator:
         self.sched = FetchingAwareScheduler(
             method.scheduler_policy, max_running=max_running)
         self.ctrl = FetchController(
-            self.sched, bandwidth, table=table, pool=self.pool,
+            self.sched, self.link, table=table, pool=self.pool,
             config=PipelineConfig(
                 adaptive=method.adaptive,
                 fixed_resolution=method.fixed_resolution,
+                pipelined=method.pipelined,
                 layerwise_admission=method.layerwise_admission,
                 blocking_fetch=method.blocking_fetch,
                 gpu_decomp_tokens_per_s=method.gpu_decomp_tokens_per_s,
@@ -303,4 +315,5 @@ class ServingSimulator:
                          decode_pool_utilization=util,
                          decompress_buffer_high_water=(
                              self.ctrl.buffer_high_water),
-                         sim_time=now)
+                         sim_time=now,
+                         retransmits=self.ctrl.retransmits_total)

@@ -18,6 +18,9 @@ class PlannedChunk:
     ref: ChunkRef
     sizes: Dict[str, int]  # resolution -> bytes
     resolution: Optional[str] = None  # chosen at fetch time (Alg. 1)
+    # t_transmit_start is the FIRST attempt's start; with WAN loss the
+    # chunk may be resent (attempts > 1) before t_transmit_done lands.
+    attempts: int = 0
     t_transmit_start: Optional[float] = None
     t_transmit_done: Optional[float] = None
     t_decode_done: Optional[float] = None

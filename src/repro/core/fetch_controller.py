@@ -8,8 +8,12 @@ diverge.  Per chunk the controller
 
   * selects the resolution with Alg. 1 (`select_resolution`) from the
     bandwidth estimate and decode-pool load,
-  * transmits it over a bandwidth trace, keeping the network pipe busy
-    (next chunk starts the moment the previous one lands),
+  * transmits it over the shared link (`repro.cluster.network.SharedLink`
+    arbitrates concurrent fetches; a bare `BandwidthTrace` is wrapped into
+    a single-flow link), retrying per-chunk on WAN loss: a transmission
+    attempt the `LossModel` drops is detected ``retransmit_timeout``
+    seconds after its wire time and resent, while — in pipelined mode —
+    later chunks keep streaming (selective repeat),
   * decodes it on the decode pool (or the CacheGen-style serialized GPU
     decompressor, or instantly for raw transfers), and
   * fires a restore event, at which the environment hook performs the
@@ -18,17 +22,25 @@ diverge.  Per chunk the controller
 After every restore the controller re-evaluates the Appx A.3 layer-wise
 condition and, when satisfied, calls
 ``scheduler.notify_early_admissible`` so suffix prefill can start while
-later layer groups are still in flight.
+later layer groups are still in flight.  A fetch with any retransmit
+outstanding is never admitted early: the lost chunk's layer group is not
+actually buffered, so admitting would stall compute (the chunk-latency
+estimate also inflates naturally, since latencies are measured from the
+*first* transmission attempt).
 
 Environment differences (real codec work vs. analytic cost models, real
 blob sizes vs. ratio-derived sizes) live behind :class:`FetchHooks`; the
-stage ordering, pipelining, and admission logic are written once here.
+stage ordering, pipelining, retransmission, and admission logic are
+written once here — both `_SimHooks` and `_EngineHooks` pump this same
+retry/fair-share state machine (the "no second pipeline" rule).
+
+See ``docs/fetch_pipeline.md`` for the full state machine and timeline.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -38,6 +50,7 @@ from repro.core.fetch import FetchPlan, PlannedChunk
 from repro.core.layout import RESOLUTION_ORDER
 from repro.core.pipelining import non_blocking_ok
 from repro.core.scheduler import ReqState, Request
+from repro.cluster.network import make_link
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +67,11 @@ class PipelineConfig:
     gpu_decomp_tokens_per_s: float = 0.0  # CacheGen CUDA decompression
     use_table_sizes: bool = False  # Appx A.2 table sizes, not real bytes
     resolutions: Tuple[str, ...] = RESOLUTION_ORDER
+    # WAN loss handling: a dropped attempt is detected this many seconds
+    # after its wire transfer would have completed (ack timeout), then the
+    # chunk is resent at the same resolution.
+    retransmit_timeout: float = 0.05
+    max_attempts: int = 64  # hard cap per chunk (stalled-link guard)
 
 
 class FetchHooks:
@@ -101,15 +119,19 @@ class ActiveFetch:
     active_res: Optional[str] = None
     gpu_decomp_until: float = 0.0
     chunk_latencies: List[float] = dataclasses.field(default_factory=list)
+    pending_retx: Set[int] = dataclasses.field(default_factory=set)
+    retransmits: int = 0  # dropped attempts resent so far
 
 
 class FetchController:
     """Event-driven pipeline over all in-flight fetches.
 
-    ``bandwidth`` must provide ``bw_at(t)`` and ``transmit(nbytes, t0)``
-    (see `repro.cluster.network.BandwidthTrace`); ``pool`` (optional)
-    must provide ``decode(res, t_ready, size_scale)`` and ``load_at(t)``
-    (see `repro.cluster.decodepool.DecodePool`).
+    ``bandwidth`` is a `repro.cluster.network.SharedLink` (multi-flow
+    arbitration + optional `LossModel`) or anything providing ``bw_at(t)``
+    and ``transmit(nbytes, t0)`` — e.g. a bare ``BandwidthTrace``, which
+    is wrapped into a single-flow link.  ``pool`` (optional) must provide
+    ``decode(res, t_ready, size_scale)`` and ``load_at(t)`` (see
+    `repro.cluster.decodepool.DecodePool`).
     """
 
     def __init__(self, sched, bandwidth, *,
@@ -118,7 +140,9 @@ class FetchController:
                  config: Optional[PipelineConfig] = None,
                  hooks: Optional[FetchHooks] = None):
         self.sched = sched
-        self.bw = bandwidth
+        self.link = make_link(bandwidth)
+        self.link.bind(self._push)
+        self.bw = self.link  # link-rate view for estimator seeding
         if table is None and pool is not None:
             table = pool.table  # decode scaling needs the pool's profile
         self.table = table
@@ -128,6 +152,7 @@ class FetchController:
         self.active: Dict[int, ActiveFetch] = {}
         self.now = 0.0
         self.buffer_high_water = 0.0
+        self.retransmits_total = 0  # across all fetches (WAN stats)
         self._events: List[Tuple[float, int, Callable[[float], None]]] = []
         self._eid = 0
 
@@ -178,6 +203,7 @@ class FetchController:
         f = ActiveFetch(req, plan, BandwidthEstimator(self.bw.bw_at(now)),
                         trans_free_at=now)
         self.active[req.rid] = f
+        self.link.open_flow(req.rid, weight=getattr(req, "weight", 1.0))
         if self.config.blocking_fetch:
             self._start_blocking(f, now)
         else:
@@ -186,14 +212,19 @@ class FetchController:
 
     def _start_blocking(self, f: ActiveFetch, now: float) -> None:
         """LMCache-style inference-blocking fetch: one bulk transfer of
-        every chunk, bulk decode, chunk-wise restoration buffer."""
+        every chunk, bulk decode, chunk-wise restoration buffer.  The bulk
+        stream monopolizes the link (no per-chunk arbitration); WAN loss
+        becomes a goodput haircut of ``1 / (1 - mean_loss_rate)`` since a
+        byte-stream transfer retransmits inline."""
         res = self.config.fixed_resolution
         total = 0.0
         for pc in f.plan.chunks:
             pc.resolution = res
             pc.t_transmit_start = now
             total += self._chunk_bytes(f, pc, res)
-        t_done = self.bw.transmit(total, now)
+        if self.link.loss is not None:
+            total /= max(1.0 - self.link.loss.mean_loss_rate(), 1e-3)
+        t_done = self.link.transmit(total, now)
         if self.pool is not None:
             _, t_done = self.pool.decode(res, t_done,
                                          size_scale=len(f.plan.chunks))
@@ -248,29 +279,60 @@ class FetchController:
         plan = f.plan
         if plan.next_to_send >= len(plan.chunks):
             return
-        pc = plan.chunks[plan.next_to_send]
+        seq = plan.next_to_send
+        pc = plan.chunks[seq]
         plan.next_to_send += 1
         res = self._choose_resolution(f, pc, now)
         pc.resolution = res
         f.active_res = res
-        nbytes = self._chunk_bytes(f, pc, res)
+        self._transmit(f, pc, seq, attempt=1, now=now)
+
+    def _transmit(self, f: ActiveFetch, pc: PlannedChunk, seq: int,
+                  attempt: int, now: float) -> None:
+        """Submit one transmission attempt of chunk ``seq`` to the link.
+        Retransmissions resend the same resolution (the blob already
+        chosen); ``pc.t_transmit_start`` keeps the *first* attempt's start
+        so latency stats include the full loss penalty."""
+        nbytes = self._chunk_bytes(f, pc, pc.resolution)
         t_start = max(now, f.trans_free_at)
-        pc.t_transmit_start = t_start
-        t_done = self.bw.transmit(nbytes, t_start)
-        f.trans_free_at = t_done
-        f.est.observe(int(nbytes), t_done - t_start)
+        pc.attempts = attempt
+        if attempt == 1:
+            pc.t_transmit_start = t_start
+        self.link.submit(
+            f.req.rid, nbytes, t_start,
+            lambda t, f=f, pc=pc, seq=seq, attempt=attempt, nbytes=nbytes,
+            t_start=t_start: self._on_wire(f, pc, seq, attempt, nbytes,
+                                           t_start, t))
 
-        def on_transmitted(t: float, f=f, pc=pc, nbytes=nbytes,
-                           t_start=t_start) -> None:
-            self._on_transmitted(f, pc, nbytes, t_start, t)
-
-        self._push(t_done, on_transmitted)
+    def _on_wire(self, f: ActiveFetch, pc: PlannedChunk, seq: int,
+                 attempt: int, nbytes: float, t_start: float,
+                 now: float) -> None:
+        """Wire transfer of one attempt finished: either the chunk landed
+        (advance to decode) or the loss model dropped it (arm the
+        retransmit timer).  Pipelined mode streams the next chunk either
+        way — selective repeat keeps the pipe busy during loss recovery."""
+        if self.config.pipelined and attempt == 1:
+            self._send_next(f, now)
+        loss = self.link.loss
+        if (loss is not None and attempt < self.config.max_attempts
+                and loss.dropped(f.req.rid, seq, attempt)):
+            f.pending_retx.add(seq)
+            f.retransmits += 1
+            self.retransmits_total += 1
+            t_retry = now + self.config.retransmit_timeout
+            self._push(t_retry,
+                       lambda t, f=f, pc=pc, seq=seq, attempt=attempt:
+                       self._transmit(f, pc, seq, attempt + 1, t))
+            return
+        f.pending_retx.discard(seq)
+        # goodput sample over the full chunk history (first attempt start
+        # -> landing), so the estimate degrades under loss/contention
+        f.est.observe(int(nbytes), now - pc.t_transmit_start)
+        self._on_transmitted(f, pc, nbytes, pc.t_transmit_start, now)
 
     def _on_transmitted(self, f: ActiveFetch, pc: PlannedChunk,
                         nbytes: float, t_start: float, now: float) -> None:
         pc.t_transmit_done = now
-        if self.config.pipelined:
-            self._send_next(f, now)  # keep the transmission pipe busy
         if self.pool is not None:
             ref = self.table.chunk_size_mb[pc.resolution] * 1e6
             _, t_dec = self.pool.decode(pc.resolution, now,
@@ -306,10 +368,16 @@ class FetchController:
     def _finish(self, f: ActiveFetch, now: float) -> None:
         f.req.layers_ready = f.plan.layers_ready()
         self.active.pop(f.req.rid, None)
+        self.link.close_flow(f.req.rid)
         self.sched.notify_fetch_done(f.req, now)
 
     # -- Appx A.3 layer-wise early admission --------------------------------
     def _maybe_admit_early(self, f: ActiveFetch, now: float) -> None:
+        if f.pending_retx:
+            # A dropped chunk's layer group is NOT buffered even though
+            # later chunks may already be restored; admitting now would
+            # stall compute at that group.  Wait for the retransmit.
+            return
         comp = self.hooks.comp_times(f.req)
         if comp is None:
             return

@@ -35,6 +35,10 @@ class Request:
     max_new_tokens: int = 64
     reuse_tokens: int = 0  # prefix tokens whose KV is fetched remotely
     prefix: Optional[str] = None  # manifest key when reuse_tokens > 0
+    # Shared-link arbitration weight: under the "fair" policy this fetch
+    # receives weight/total_weight of the link; under "drr" it is served
+    # proportionally more bytes per round (see network.SharedLink).
+    weight: float = 1.0
 
     state: ReqState = ReqState.WAITING
     # fetch progress

@@ -19,6 +19,12 @@ cluster simulator uses.  Two operating modes:
     request can start suffix prefill while later layer groups are still
     in flight (Appx A.3 early admission); ``fetch_mode="sync"`` drains
     the pipeline serially at dispatch — the pre-pipelining baseline.
+
+In virtual-clock mode the network is a WAN-grade model: concurrent
+fetches split the trace via `repro.cluster.network.SharedLink` (weighted
+``fair`` fluid sharing or ``drr`` chunk round-robin, ``link_policy=``)
+and a seeded ``loss=`` `LossModel` drops chunk attempts which the
+controller retransmits — restoration stays bit-exact, only timing moves.
 """
 from __future__ import annotations
 
@@ -41,6 +47,7 @@ from repro.core.layout import IntraLayout
 from repro.core.scheduler import FetchingAwareScheduler, ReqState, Request
 from repro.cluster.costmodel import CHIPS, EngineCostModel
 from repro.cluster.decodepool import DecodePool
+from repro.cluster.network import LossModel, make_link
 from repro.cluster.storage import KVStore
 from repro.models.attention import attend
 from repro.models.common import rms_norm
@@ -88,6 +95,8 @@ class LiveEngine:
                  resolution: str = "240p",
                  fetch_mode: str = "sync",
                  bandwidth=None,
+                 loss: Optional[LossModel] = None,
+                 link_policy: Optional[str] = None,  # None -> "fair"
                  decode_table: Optional[DecodeTable] = None,
                  cost: Optional[EngineCostModel] = None):
         assert fetch_mode in ("sync", "async")
@@ -104,16 +113,22 @@ class LiveEngine:
         self.finished: List[Request] = []
         self._clock = 0.0
         self.virtual = bandwidth is not None
-        assert self.virtual or fetch_mode == "sync", \
-            "async fetch needs a bandwidth trace (virtual clock)"
+        assert self.virtual or (fetch_mode == "sync" and loss is None
+                                and link_policy is None), \
+            "WAN options (async fetch, loss=, link_policy=) need a " \
+            "bandwidth trace (virtual clock)"
         self.cost = cost
         self.ctrl: Optional[FetchController] = None
         if self.virtual:
             if self.cost is None:
                 self.cost = EngineCostModel(cfg, CHIPS["h20"], 1)
             pool = DecodePool(decode_table) if decode_table else None
+            # concurrent fetches contend for one WAN link (fair or DRR
+            # split) and survive seeded chunk loss via retransmission —
+            # the same link model the simulator pumps
+            link = make_link(bandwidth, policy=link_policy, loss=loss)
             self.ctrl = FetchController(
-                self.sched, bandwidth, table=decode_table, pool=pool,
+                self.sched, link, table=decode_table, pool=pool,
                 config=PipelineConfig(
                     adaptive=decode_table is not None,
                     fixed_resolution=resolution,

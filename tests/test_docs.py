@@ -1,0 +1,25 @@
+"""Docs cannot rot silently: the commands and links quoted in README.md
+and docs/*.md are smoke-checked by tools/check_docs.py; this wrapper
+makes the check part of tier-1 (CI additionally runs it as a dedicated
+job so a docs regression is visible as its own failure)."""
+import pathlib
+import sys
+
+
+def test_documented_commands_smoke():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "tools"))
+    try:
+        import check_docs
+        assert check_docs.main() == 0
+    finally:
+        sys.path.pop(0)
+
+
+def test_docs_exist_and_are_linked():
+    root = pathlib.Path(__file__).resolve().parents[1]
+    readme = (root / "README.md").read_text()
+    assert "docs/fetch_pipeline.md" in readme
+    assert (root / "docs" / "fetch_pipeline.md").exists()
+    # ROADMAP points at the pipeline doc too (tentpole satellite)
+    assert "docs/fetch_pipeline.md" in (root / "ROADMAP.md").read_text()

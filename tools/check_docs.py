@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Docs smoke checker: the commands quoted in README.md and docs/*.md
+must actually run, so the docs cannot rot silently (ISSUE 2, docs CI).
+
+For every fenced ```bash block the checker validates each command line:
+
+  * ``python <script.py>``        -> the script exists and byte-compiles
+  * ``python -m pytest ...``      -> ``pytest --version`` succeeds (the
+                                     suite itself is CI's tier-1 job)
+  * ``python -m <module> ...``    -> ``python -m <module> --help`` runs
+                                     under the documented PYTHONPATH
+  * anything else                 -> flagged as unknown (fail): keep the
+                                     docs to commands this tool can vouch
+                                     for, or teach it the new shape
+
+Relative markdown links are also resolved, so a doc cannot point at a
+file that was moved or deleted.  Runs fully offline in a few seconds:
+
+    PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import py_compile
+import re
+import shlex
+import subprocess
+import sys
+from typing import List, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_GLOBS = ["README.md", "docs/*.md"]
+FENCE = re.compile(r"^```(\w*)\s*$")
+LINK = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+
+
+def doc_files() -> List[pathlib.Path]:
+    out: List[pathlib.Path] = []
+    for g in DOC_GLOBS:
+        out.extend(sorted(ROOT.glob(g)))
+    return out
+
+
+def extract_commands(path: pathlib.Path) -> List[Tuple[int, str]]:
+    """(line_no, command) for each command line in bash-tagged fences."""
+    cmds: List[Tuple[int, str]] = []
+    lang = None
+    for i, line in enumerate(path.read_text().splitlines(), 1):
+        m = FENCE.match(line)
+        if m:
+            lang = None if lang is not None else m.group(1).lower()
+            continue
+        if lang in ("bash", "sh", "shell", "console"):
+            cmd = line.strip().lstrip("$ ").strip()
+            if cmd and not cmd.startswith("#"):
+                cmds.append((i, cmd))
+    return cmds
+
+
+def _run(argv: List[str], env_extra: dict) -> Tuple[bool, str]:
+    import os
+    env = dict(os.environ)
+    for k, v in env_extra.items():
+        env[k] = f"{v}:{env[k]}" if k == "PYTHONPATH" and k in env else v
+    try:
+        p = subprocess.run(argv, cwd=ROOT, env=env, timeout=120,
+                           capture_output=True, text=True)
+    except Exception as e:  # noqa: BLE001
+        return False, repr(e)
+    return p.returncode == 0, (p.stderr or p.stdout)[-400:]
+
+
+def check_command(cmd: str) -> Tuple[bool, str]:
+    toks = shlex.split(cmd)
+    env_extra = {}
+    while toks and "=" in toks[0] and not toks[0].startswith("-"):
+        k, v = toks.pop(0).split("=", 1)
+        env_extra[k] = v
+    if not toks:
+        return True, "env-only line"
+    if toks[0] not in ("python", "python3", sys.executable):
+        return False, f"unknown command shape: {toks[0]!r}"
+    toks = toks[1:]
+    if toks[:1] == ["-m"]:
+        module = toks[1]
+        if module == "pytest":
+            ok, out = _run([sys.executable, "-m", "pytest", "--version"],
+                           env_extra)
+            return ok, out if not ok else "pytest available"
+        ok, out = _run([sys.executable, "-m", module, "--help"], env_extra)
+        return ok, out if not ok else f"-m {module} --help ran"
+    script = ROOT / toks[0]
+    if not script.exists():
+        return False, f"missing script {toks[0]}"
+    try:
+        py_compile.compile(str(script), doraise=True)
+    except py_compile.PyCompileError as e:
+        return False, str(e)
+    return True, f"{toks[0]} exists and compiles"
+
+
+def check_links(path: pathlib.Path) -> List[str]:
+    bad = []
+    for target in LINK.findall(path.read_text()):
+        target = target.split("#")[0].strip()
+        if not target or target.startswith(("http://", "https://")):
+            continue
+        if not (path.parent / target).exists():
+            bad.append(f"{path.relative_to(ROOT)}: broken link -> {target}")
+    return bad
+
+
+def main() -> int:
+    failures: List[str] = []
+    n_cmds = 0
+    for doc in doc_files():
+        failures.extend(check_links(doc))
+        for line_no, cmd in extract_commands(doc):
+            n_cmds += 1
+            ok, detail = check_command(cmd)
+            tag = "ok" if ok else "FAIL"
+            print(f"[{tag}] {doc.relative_to(ROOT)}:{line_no}: {cmd}"
+                  + ("" if ok else f"\n       {detail}"))
+            if not ok:
+                failures.append(f"{doc.relative_to(ROOT)}:{line_no}: {cmd}")
+    if not n_cmds:
+        failures.append("no commands found in docs: checker misconfigured?")
+    if failures:
+        print(f"\n{len(failures)} docs check(s) failed:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nall {n_cmds} documented commands smoke-checked OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
