@@ -15,7 +15,15 @@ retransmission and multi-request contention over a fair-shared link —
 ``ttft.wan.sim.*`` sweeps loss rate (1-5%) and contention (2/4/8-way) in
 the analytic simulator; ``ttft.wan.live.*`` runs the real engine under
 2% loss + 4-way contention and checks async beats sync with identical
-output tokens (lossless restore despite retransmits)."""
+output tokens (lossless restore despite retransmits).
+
+The ``ttft.storage.*`` rows exercise the multi-node prefix storage tier
+(docs/storage_tier.md) under capacity pressure: a seeded Zipf workload
+over a prefix trie compares eviction policies (cost-aware must beat LRU
+on mean TTFT — it retains hot prefixes the LRU flushes), placement
+policies (popularity replication vs plain consistent hashing under
+contention), and a live-engine partial hit whose ancestor-fetch +
+tail-recompute output must equal a full recompute token-for-token."""
 from __future__ import annotations
 
 import dataclasses
@@ -204,6 +212,121 @@ def _wan_live_rows() -> List[Row]:
     return rows
 
 
+def _storage_rows() -> List[Row]:
+    """Multi-node storage tier under capacity pressure (a seeded Zipf
+    workload over a prefix trie, each node 35% of the library):
+    eviction-policy sweep — the acceptance gate is cost-aware beating
+    LRU on mean TTFT — plus placement (hash vs popularity replication)
+    under single-prefix contention."""
+    import numpy as np
+
+    from repro.cluster.storage import (StorageCluster, StorageNode,
+                                       synthetic_stored_prefix)
+    from repro.data.workload import prefix_trie_specs, zipf_prefix_trace
+
+    specs = prefix_trie_specs(3, 2, base_tokens=40_000, ext_tokens=20_000)
+    entries = [synthetic_stored_prefix(
+        s.key, s.n_tokens, raw_bytes_per_token=CFG.kv_bytes_per_token(),
+        ratios=RATIOS, parent=s.parent) for s in specs]
+    total = sum(e.stored_bytes for e in entries)
+    rows: List[Row] = []
+    ttfts = {}
+    for policy in ("lru", "lfu", "cost"):
+        node = StorageNode("n0", capacity_bytes=int(total * 0.35),
+                           policy=policy,
+                           link=BandwidthTrace.constant(8.0))
+        cluster = StorageCluster([node])
+        for e in entries:
+            cluster.register(e, 0.0)
+        sim = ServingSimulator(CFG, kvfetcher_spec(RATIOS), chip="h20",
+                               n_chips=2,
+                               bandwidth=BandwidthTrace.constant(8.0),
+                               storage=cluster, table=H20_TABLE)
+        rng = np.random.default_rng(42)
+        reqs = zipf_prefix_trace(rng, specs, n_requests=30, alpha=1.1,
+                                 gap=120.0, max_new_tokens=4)
+        sim.run(reqs, max_new_tokens=4)
+        t = summarize(reqs)["ttft_mean"]
+        ttfts[policy] = t
+        rows.append((f"ttft.storage.evict_{policy}", t * 1e6, t))
+        rows.append((f"ttft.storage.evict_{policy}.hit_rate", 0.0,
+                     cluster.hit_rate()))
+        rows.append((f"ttft.storage.evict_{policy}.misses", 0.0,
+                     float(cluster.misses)))
+    assert ttfts["cost"] < ttfts["lru"], \
+        "cost-aware eviction must beat LRU under the Zipf workload"
+    rows.append(("ttft.storage.speedup_cost_vs_lru", 0.0,
+                 ttfts["lru"] / ttfts["cost"]))
+
+    # placement: 6 back-to-back asks of one hot prefix over 3 nodes with
+    # their own 4 Gbps links; popularity replication spreads the load
+    hot = entries[0]
+    place_ttfts = {}
+    for placement in ("hash", "popular"):
+        nodes = [StorageNode(f"n{i}", capacity_bytes=None,
+                             link=BandwidthTrace.constant(4.0))
+                 for i in range(3)]
+        cluster = StorageCluster(nodes, placement=placement,
+                                 replicate_threshold=2)
+        cluster.register(hot, 0.0)
+        sim = ServingSimulator(CFG, kvfetcher_spec(RATIOS), chip="h20",
+                               n_chips=2,
+                               bandwidth=BandwidthTrace.constant(8.0),
+                               storage=cluster, table=H20_TABLE)
+        reqs = [dataclasses.replace(r, prefix=hot.key,
+                                    reuse_tokens=hot.n_tokens)
+                for r in fixed_context_trace(hot.n_tokens + 1_000,
+                                             n_requests=6, gap=2.0,
+                                             max_new_tokens=4)]
+        sim.run(reqs, max_new_tokens=4)
+        t = summarize(reqs)["ttft_mean"]
+        place_ttfts[placement] = t
+        rows.append((f"ttft.storage.place_{placement}", t * 1e6, t))
+    rows.append(("ttft.storage.speedup_popular_vs_hash", 0.0,
+                 place_ttfts["hash"] / place_ttfts["popular"]))
+    return rows
+
+
+def _storage_live_rows() -> List[Row]:
+    """Real engine against a 2-node StorageCluster: only the 64-token
+    ancestor of the 96-token ask is registered, so the lookup is a
+    partial hit — fetch the ancestor, recompute the tail.  Acceptance:
+    the generation is identical to a full recompute of the same
+    prompt."""
+    import numpy as np
+
+    from repro.cluster.storage import KVStore, StorageCluster, StorageNode
+    from repro.serving import paged_model
+    from repro.serving.engine import LiveEngine
+
+    env = _live_env()
+    cfg, params = env["cfg"], env["params"]
+    full = env["full"]
+    kv_k, kv_v = paged_model.donor_prefix_kv(params, cfg, full[:64])
+    cluster = StorageCluster([StorageNode(f"n{i}") for i in range(2)])
+    cluster.register_prefix(np.asarray(full[:64]), kv_k, kv_v,
+                            tokens_per_chunk=24, resolutions=("240p",))
+    eng = LiveEngine(params, cfg, cluster, resolution="240p")
+    req = eng.submit(full, reuse_prefix="by-tokens", reuse_tokens=96,
+                     max_new_tokens=4)
+    eng.run()
+    assert req.storage_hit == "partial" and req.reuse_tokens == 64, \
+        f"expected a 64-token partial hit, got {req.storage_hit}"
+
+    ref = LiveEngine(params, cfg, KVStore(), resolution="240p")
+    ref_req = ref.submit(full, max_new_tokens=4)
+    ref.run()
+    assert eng.outputs[req.rid] == ref.outputs[ref_req.rid], \
+        "partial hit (ancestor fetch + tail recompute) must emit " \
+        "tokens identical to a full recompute"
+    return [
+        ("ttft.storage.live.partial_hit.fetch", req.ttft * 1e6, req.ttft),
+        ("ttft.storage.live.partial_hit.covered_tokens", 0.0, 64.0),
+        ("ttft.storage.live.full_recompute", ref_req.ttft * 1e6,
+         ref_req.ttft),
+    ]
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     methods = {
@@ -227,6 +350,8 @@ def run() -> List[Row]:
             rows.append((f"ttft.speedup_vs_cachegen.bw{gbps:g}"
                          f".ctx{ctx // 1000}k", 0.0, base / ours))
     rows.extend(_wan_sim_rows())
+    rows.extend(_storage_rows())
     rows.extend(_live_rows())
     rows.extend(_wan_live_rows())
+    rows.extend(_storage_live_rows())
     return rows

@@ -12,6 +12,11 @@ pools with the paper's profiled NVDEC tables (decodepool.py).
 Compressed chunk sizes are driven by ratios measured with the real codec
 on real KV tensors.
 
+With ``storage=`` a multi-node prefix tier (storage.py,
+docs/storage_tier.md) resolves every fetch before it starts: full hits
+fetch over the serving node's own link, partial hits fetch the resident
+ancestor and recompute the tail, misses fall back to a full prefill.
+
 Methods modeled (paper §5.1 baselines):
   kvfetcher    video codec (ours), adaptive res, fetch-aware sched,
                layer-wise early admission, frame-wise restoration
@@ -40,6 +45,7 @@ from repro.core.scheduler import FetchingAwareScheduler, Request
 from repro.cluster.costmodel import CHIPS, EngineCostModel
 from repro.cluster.decodepool import DecodePool
 from repro.cluster.network import BandwidthTrace, LossModel, make_link
+from repro.cluster.storage import StorageCluster
 
 RESOLUTIONS = ("240p", "480p", "640p", "1080p")
 
@@ -177,6 +183,7 @@ class ServingSimulator:
                  bandwidth: BandwidthTrace,
                  loss: Optional[LossModel] = None,
                  link_policy: Optional[str] = None,  # None -> "fair"
+                 storage: Optional[StorageCluster] = None,
                  table: Optional[DecodeTable] = None,
                  chunk_tokens: int = 10_000,
                  prefill_chunk: int = 2048,
@@ -186,7 +193,17 @@ class ServingSimulator:
         self.method = method
         self.cost = EngineCostModel(cfg, CHIPS[chip], n_chips, mfu=mfu)
         # concurrent fetches share (and contend for) one WAN link; chunks
-        # may additionally be dropped by the loss model and retransmitted
+        # may additionally be dropped by the loss model and retransmitted.
+        # With a multi-node ``storage`` tier each fetch is instead routed
+        # over the serving node's own link (this one stays the default for
+        # nodes without a dedicated link).
+        self.storage = storage
+        if storage is not None and (loss is not None
+                                    or link_policy is not None):
+            assert all(n.link is None for n in storage.nodes), \
+                "loss=/link_policy= only shape the default link; nodes " \
+                "with their own links must carry their own LossModel/" \
+                "policy: StorageNode(link=make_link(trace, policy=, loss=))"
         self.link = make_link(bandwidth, policy=link_policy, loss=loss)
         self.bw = self.link.trace
         self.table = table
@@ -228,6 +245,31 @@ class ServingSimulator:
         return synthetic_plan(req.rid, req.reuse_tokens, n_attn,
                               self.chunk_tokens)
 
+    # -- storage-tier fetch dispatch ---------------------------------------
+    def _dispatch_fetch(self, req: Request, now: float) -> bool:
+        """Start ``req``'s fetch; with a storage tier, resolve residency
+        first.  A full hit fetches everything over the serving node's
+        link; a partial hit fetches the resident *ancestor* (the tail is
+        recomputed as extra suffix prefill); a miss re-queues the request
+        as a plain full prefill.  Returns True on a miss (the caller must
+        re-run admission — there is no fetch event to wait for)."""
+        if self.storage is None:
+            self.ctrl.start(req, self._build_plan(req), now)
+            return False
+        hit = self.storage.lookup(req.prefix, now,
+                                  requested_tokens=req.reuse_tokens)
+        req.storage_hit = hit.kind
+        if hit.kind == "miss":
+            self.sched.notify_fetch_miss(req, now)
+            return True
+        req.storage_node = hit.node.node_id
+        if hit.kind == "partial":
+            req.requested_reuse_tokens = req.reuse_tokens
+            req.reuse_tokens = hit.covered_tokens
+        self.ctrl.start(req, self._build_plan(req), now,
+                        link=hit.node.link)
+        return False
+
     # -- main loop ----------------------------------------------------------------
     def run(self, requests: List[Request], max_new_tokens: int = 32,
             horizon: float = 100_000.0) -> SimResult:
@@ -253,8 +295,14 @@ class ServingSimulator:
                     self.prefill_remaining[req.rid] = max(
                         req.prompt_len - req.reuse_tokens, 0)
                     self.context_done[req.rid] = req.reuse_tokens
+            missed = False
             for req in self.sched.take_fetches():
-                self.ctrl.start(req, self._build_plan(req), now)
+                missed |= self._dispatch_fetch(req, now)
+            if missed:
+                # miss fallbacks re-entered the waiting queue with
+                # reuse_tokens=0; admit them now (their full-prompt
+                # prefill state was set at arrival and still stands)
+                self.sched.schedule(now)
             # engine work for this iteration
             prefills = [r for r in self.sched.running
                         if self.prefill_remaining[r.rid] > 0]

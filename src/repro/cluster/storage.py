@@ -1,38 +1,596 @@
-"""Remote KV storage node: holds encoded chunk manifests keyed by prefix.
+"""Multi-node prefix storage tier: capacity-bounded placement, eviction,
+and longest-prefix-match lookup for encoded KV manifests.
 
-In production this is a dedicated storage server (LMCache-style) or a
-disaggregated pool (Mooncake-style); here it is an in-process store whose
-bytes are only reachable through the (simulated or live) network path.
+The paper's remote-reuse wins assume the encoded prefix is actually
+*resident* somewhere fetchable.  In production that residency is managed
+by a dedicated storage layer (LMCache-style pools, Mooncake-style
+disaggregated stores); this module models that layer as a first-class
+subsystem with three pieces:
+
+  * :class:`StoredPrefix` — the unit of placement: one reusable prefix's
+    encoded artifacts (multi-resolution blob sizes, optional real
+    `KVManifest`, optional token ids) plus its ancestry link for
+    longest-prefix matching.
+  * :class:`StorageNode` — one capacity-bounded server: byte-accurate
+    admission with pluggable eviction (``lru``, ``lfu``, or the
+    cost-aware ``cost`` policy scoring bytes-saved-per-byte-stored), and
+    optionally its *own* `repro.cluster.network.SharedLink`, so where a
+    prefix lives changes the observed fetch path (and therefore TTFT).
+  * :class:`StorageCluster` — places prefixes across nodes (consistent
+    hashing, or popularity-aware replication on top of it), serves
+    lookups that may be **full** hits, **partial** hits (a stored
+    *ancestor* prefix: fetch the ancestor, recompute the tail), or
+    misses (recompute everything; the prefix is re-admitted from the
+    durable catalog — a pull-through cache).
+
+The cluster's :attr:`StorageCluster.events` log records every admit /
+evict / hit / partial / miss / replicate decision in order.  All
+decisions are pure functions of the access sequence and entry sizes (no
+internal RNG), so the analytic simulator and the live engine replay the
+*identical* event sequence for the same workload — tested in
+``tests/test_storage.py``.
+
+Units
+-----
+All capacities and sizes are **bytes** internally (``stored_bytes``,
+``capacity_bytes``, per-resolution accounting); timestamps are
+**seconds** on the caller's clock.  ``__repr__`` renders GB/MB (like
+`SharedLink` renders Gbps) so printed nodes are readable.
+
+See ``docs/storage_tier.md`` for the data model, eviction semantics,
+placement policies, and the partial-hit timeline.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.chunks import KVManifest, encode_prefix, prefix_key
+from repro.cluster.network import make_link
+
+#: bytes per gigabyte, for constructors/repr (internal unit is bytes).
+GB = 1e9
+
+
+# ---------------------------------------------------------------------------
+# The unit of placement
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StoredPrefix:
+    """One reusable prefix's encoded artifacts, as the storage tier sees
+    them.
+
+    ``bytes_by_resolution`` is the encoded footprint per resolution (all
+    resolutions of a prefix are stored together — the adaptive fetcher
+    picks among them at fetch time, so a node must hold the full ladder).
+    ``raw_kv_bytes`` is the uncompressed KV footprint a hit avoids
+    recomputing/transferring; the cost-aware eviction score uses it.
+    ``parent`` links to the longest registered ancestor prefix (or None),
+    forming the trie that longest-prefix-match lookups walk.
+    ``manifest``/``token_ids`` are present on the live path and absent
+    for the simulator's synthetic entries.
+    """
+
+    key: str
+    n_tokens: int
+    bytes_by_resolution: Dict[str, int]
+    raw_kv_bytes: int = 0
+    parent: Optional[str] = None
+    manifest: Optional[KVManifest] = None
+    token_ids: Optional[np.ndarray] = None
+
+    @property
+    def stored_bytes(self) -> int:
+        """Total encoded footprint (bytes) — the admission/eviction unit."""
+        return sum(self.bytes_by_resolution.values())
+
+    @staticmethod
+    def from_manifest(manifest: KVManifest, *,
+                      raw_kv_bytes: int = 0,
+                      parent: Optional[str] = None,
+                      token_ids: Optional[np.ndarray] = None
+                      ) -> "StoredPrefix":
+        by_res: Dict[str, int] = {}
+        for (_, res), blob in manifest.blobs.items():
+            by_res[res] = by_res.get(res, 0) + len(blob)
+        return StoredPrefix(key=manifest.prefix, n_tokens=manifest.n_tokens,
+                            bytes_by_resolution=by_res,
+                            raw_kv_bytes=raw_kv_bytes, parent=parent,
+                            manifest=manifest, token_ids=token_ids)
+
+    def __repr__(self) -> str:
+        mb = self.stored_bytes / 1e6
+        par = f", parent={self.parent}" if self.parent else ""
+        return (f"StoredPrefix({self.key}, {self.n_tokens} tok, "
+                f"{mb:.2f} MB{par})")
+
+
+def synthetic_stored_prefix(key: str, n_tokens: int, *,
+                            raw_bytes_per_token: float,
+                            ratios: Dict[str, float],
+                            parent: Optional[str] = None) -> "StoredPrefix":
+    """Manifest-less entry for the simulator: encoded sizes are derived
+    from the raw KV footprint and per-resolution compression ratios, the
+    same model `ServingSimulator._chunk_bytes` uses for wire sizes."""
+    raw = int(raw_bytes_per_token * n_tokens)
+    by_res = {res: int(raw / ratio) for res, ratio in ratios.items()}
+    return StoredPrefix(key=key, n_tokens=n_tokens,
+                        bytes_by_resolution=by_res, raw_kv_bytes=raw,
+                        parent=parent)
+
+
+# ---------------------------------------------------------------------------
+# One capacity-bounded node
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Resident:
+    """Node-local accounting for one resident prefix."""
+    entry: StoredPrefix
+    stored_at: float
+    last_used: float
+    hits: int = 0
+    seq: int = 0  # admission order, the deterministic tie-breaker
+
+
+@dataclasses.dataclass
+class NodeStats:
+    hits: int = 0
+    evictions: int = 0
+    admissions: int = 0
+    rejections: int = 0  # entry alone exceeds capacity
+    bytes_served: int = 0  # encoded bytes of served (full-hit) lookups
+
+
+class StorageNode:
+    """One storage server: capacity in bytes, pluggable eviction, and an
+    optional dedicated network link.
+
+    Eviction policies (who goes first when over capacity):
+
+    ``lru``   least-recently-used entry (oldest ``last_used``).
+    ``lfu``   least-frequently-used (fewest hits; LRU among ties).
+    ``cost``  lowest bytes-saved-per-byte-stored score
+              ``hits * raw_kv_bytes / stored_bytes`` — an entry earns its
+              residency by the raw KV bytes its hits avoided, normalized
+              by the encoded bytes it occupies.  Never-hit entries score
+              0 and churn among themselves (LRU order) while proven-hot
+              prefixes survive scan pressure that would flush an LRU.
+
+    ``capacity_bytes=None`` means unbounded (the legacy flat-store
+    behaviour `KVStore` keeps).  ``link`` is the node's own
+    `SharedLink`; fetches for prefixes resident here are routed over it,
+    so placement decisions change observed TTFT.
+    """
+
+    POLICIES = ("lru", "lfu", "cost")
+
+    def __init__(self, node_id: str, capacity_bytes: Optional[float] = None,
+                 *, policy: str = "lru", link=None):
+        assert policy in self.POLICIES, policy
+        self.node_id = node_id
+        self.capacity_bytes = (None if capacity_bytes is None
+                               else int(capacity_bytes))
+        self.policy = policy
+        # one persistent SharedLink per node (a bare BandwidthTrace is
+        # wrapped once here, NOT per fetch, so concurrent fetches from
+        # this node contend on the same arbiter)
+        self.link = None if link is None else make_link(link)
+        self.residents: Dict[str, _Resident] = {}
+        self.used_bytes = 0
+        self.bytes_by_resolution: Dict[str, int] = {}
+        self.stats = NodeStats()
+        self._seq = 0
+
+    def __repr__(self) -> str:
+        cap = ("unbounded" if self.capacity_bytes is None else
+               f"{self.used_bytes / GB:.2f}/{self.capacity_bytes / GB:.2f} GB")
+        return (f"StorageNode({self.node_id}, {cap}, policy={self.policy}, "
+                f"{len(self.residents)} prefixes)")
+
+    # -- residency ----------------------------------------------------------
+    def contains(self, key: str) -> bool:
+        return key in self.residents
+
+    def get(self, key: str, now: float) -> Optional[StoredPrefix]:
+        """Serve a lookup: touches recency/frequency accounting."""
+        r = self.residents.get(key)
+        if r is None:
+            return None
+        r.last_used = now
+        r.hits += 1
+        self.stats.hits += 1
+        self.stats.bytes_served += r.entry.stored_bytes
+        return r.entry
+
+    def put(self, entry: StoredPrefix, now: float
+            ) -> Tuple[bool, List[str]]:
+        """Admit ``entry``, evicting by policy until it fits.
+
+        Returns ``(admitted, evicted_keys)``.  An entry larger than the
+        whole node is rejected (never admitted by flushing everything).
+        Re-admitting a resident key replaces the stored artifact in
+        place — byte accounting follows the new version, hit history is
+        kept (it is the same prefix).
+        """
+        size = entry.stored_bytes
+        if self.capacity_bytes is not None and size > self.capacity_bytes:
+            self.stats.rejections += 1
+            return False, []
+        old = self.residents.get(entry.key)
+        if old is not None:
+            self._remove(entry.key)
+        evicted: List[str] = []
+        while (self.capacity_bytes is not None
+               and self.used_bytes + size > self.capacity_bytes):
+            victim = self._pick_victim()
+            self._drop(victim)
+            evicted.append(victim)
+        if old is not None:
+            seq, hits = old.seq, old.hits
+        else:
+            self._seq += 1
+            seq, hits = self._seq, 0
+            self.stats.admissions += 1
+        self.residents[entry.key] = _Resident(entry, stored_at=now,
+                                              last_used=now, seq=seq,
+                                              hits=hits)
+        self.used_bytes += size
+        for res, b in entry.bytes_by_resolution.items():
+            self.bytes_by_resolution[res] = \
+                self.bytes_by_resolution.get(res, 0) + b
+        return True, evicted
+
+    def _remove(self, key: str) -> None:
+        """Drop residency + byte accounting (no eviction stat)."""
+        r = self.residents.pop(key)
+        self.used_bytes -= r.entry.stored_bytes
+        for res, b in r.entry.bytes_by_resolution.items():
+            self.bytes_by_resolution[res] -= b
+
+    def _drop(self, key: str) -> None:
+        self._remove(key)
+        self.stats.evictions += 1
+
+    def _pick_victim(self) -> str:
+        """Deterministic victim selection: policy score, then LRU order,
+        then admission order (``seq``) so equal entries break ties the
+        same way in every environment."""
+        def lru_key(r: _Resident):
+            return (r.last_used, r.seq)
+
+        rs = self.residents.values()
+        if self.policy == "lru":
+            victim = min(rs, key=lru_key)
+        elif self.policy == "lfu":
+            victim = min(rs, key=lambda r: (r.hits,) + lru_key(r))
+        else:  # cost: bytes saved per byte stored
+            def score(r: _Resident) -> float:
+                saved = r.hits * max(r.entry.raw_kv_bytes,
+                                     r.entry.stored_bytes)
+                return saved / max(r.entry.stored_bytes, 1)
+            victim = min(rs, key=lambda r: (score(r),) + lru_key(r))
+        return victim.entry.key
+
+    def stored_bytes(self) -> int:
+        """Total encoded bytes resident on this node."""
+        return self.used_bytes
+
+
+# ---------------------------------------------------------------------------
+# The cluster: placement, replication, longest-prefix-match lookup
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StorageHit:
+    """Result of a cluster lookup.
+
+    ``kind``: ``"full"`` (the requested prefix is resident — fetch it
+    all), ``"partial"`` (only an *ancestor* is resident: fetch
+    ``entry`` and recompute the ``requested_tokens - covered_tokens``
+    tail), or ``"miss"`` (recompute everything; ``entry``/``node`` are
+    None).
+    """
+
+    kind: str  # "full" | "partial" | "miss"
+    requested_tokens: int
+    covered_tokens: int = 0
+    entry: Optional[StoredPrefix] = None
+    node: Optional[StorageNode] = None
+
+
+class StorageCluster:
+    """Places prefixes across :class:`StorageNode`\\ s and resolves
+    lookups to full / partial / miss outcomes.
+
+    Placement
+    ---------
+    ``hash``     consistent hashing: each node projects ``vnodes``
+                 points onto a hash ring; a prefix lives on the
+                 successor of its own point.  Node membership changes
+                 move only ~1/N of the keys.
+    ``popular``  consistent hashing **plus** popularity-aware
+                 replication: once a prefix's cluster-wide hits reach
+                 ``replicate_threshold`` it is copied to the next
+                 distinct node on the ring, and lookups rotate
+                 round-robin across the resident replicas' links — hot
+                 prefixes stop queueing behind each other.
+
+    The **catalog** is the durable origin (donor-side artifact
+    registry): it survives node evictions, so a miss re-admits the
+    prefix from the catalog after recompute (pull-through semantics,
+    ``admit``).  Only node *residency* is capacity-bounded.
+
+    Every decision is appended to :attr:`events` as ``(kind, key,
+    node_id)`` tuples — ``admit``/``evict``/``hit``/``partial``/
+    ``miss``/``replicate``/``reject`` — deterministically for a given
+    access sequence.
+    """
+
+    def __init__(self, nodes: Sequence[StorageNode], *,
+                 placement: str = "hash", replicate_threshold: int = 3,
+                 vnodes: int = 64, write_on_miss: bool = True):
+        assert placement in ("hash", "popular"), placement
+        assert len(nodes) > 0
+        assert len({n.node_id for n in nodes}) == len(nodes), \
+            "duplicate node ids"
+        self.nodes = list(nodes)
+        self.by_id = {n.node_id: n for n in self.nodes}
+        self.placement = placement
+        self.replicate_threshold = replicate_threshold
+        self.write_on_miss = write_on_miss
+        self.catalog: Dict[str, StoredPrefix] = {}
+        self.hits_by_key: Dict[str, int] = {}
+        self.events: List[Tuple[str, str, str]] = []
+        self.lookups = 0
+        self.full_hits = 0
+        self.partial_hits = 0
+        self.misses = 0
+        self._ring: List[Tuple[int, str]] = []
+        for n in self.nodes:
+            for v in range(vnodes):
+                self._ring.append((self._point(f"{n.node_id}#{v}"),
+                                   n.node_id))
+        self._ring.sort()
+
+    def __repr__(self) -> str:
+        used = sum(n.used_bytes for n in self.nodes)
+        return (f"StorageCluster({len(self.nodes)} nodes, "
+                f"{self.placement}, {len(self.catalog)} cataloged, "
+                f"{used / GB:.2f} GB resident)")
+
+    @staticmethod
+    def _point(s: str) -> int:
+        return int.from_bytes(hashlib.sha256(s.encode()).digest()[:8],
+                              "big")
+
+    def _ring_nodes(self, key: str) -> List[StorageNode]:
+        """Distinct nodes in ring order starting at ``key``'s successor."""
+        p = self._point(key)
+        i = 0
+        while i < len(self._ring) and self._ring[i][0] < p:
+            i += 1
+        seen: List[str] = []
+        for j in range(len(self._ring)):
+            nid = self._ring[(i + j) % len(self._ring)][1]
+            if nid not in seen:
+                seen.append(nid)
+            if len(seen) == len(self.nodes):
+                break
+        return [self.by_id[nid] for nid in seen]
+
+    def primary_node(self, key: str) -> StorageNode:
+        return self._ring_nodes(key)[0]
+
+    # -- registration -------------------------------------------------------
+    def register(self, entry: StoredPrefix, now: float = 0.0) -> None:
+        """Catalog ``entry`` and place it on its primary ring node."""
+        self.catalog[entry.key] = entry
+        self.hits_by_key.setdefault(entry.key, 0)
+        self._place(entry, self.primary_node(entry.key), now)
+
+    def register_prefix(self, token_ids: np.ndarray, kv_k: np.ndarray,
+                        kv_v: np.ndarray, *, now: float = 0.0,
+                        **kw) -> StoredPrefix:
+        """Encode real KV into a manifest (like the legacy `KVStore`),
+        auto-detect the longest registered ancestor from ``token_ids``,
+        and register the result."""
+        token_ids = np.asarray(token_ids)
+        key = prefix_key(token_ids)
+        man = encode_prefix(kv_k, kv_v, prefix=key, **kw)
+        parent = self._longest_cataloged(token_ids, below=len(token_ids))
+        entry = StoredPrefix.from_manifest(
+            man, raw_kv_bytes=int(kv_k.nbytes + kv_v.nbytes),
+            parent=parent.key if parent else None, token_ids=token_ids)
+        self.register(entry, now)
+        return entry
+
+    def _place(self, entry: StoredPrefix, node: StorageNode,
+               now: float) -> bool:
+        ok, evicted = node.put(entry, now)
+        for k in evicted:
+            self.events.append(("evict", k, node.node_id))
+        if ok:
+            self.events.append(("admit", entry.key, node.node_id))
+        else:
+            self.events.append(("reject", entry.key, node.node_id))
+        return ok
+
+    # -- lookup -------------------------------------------------------------
+    def _resident_nodes(self, key: str) -> List[StorageNode]:
+        """Nodes holding ``key``, in deterministic ring order."""
+        return [n for n in self._ring_nodes(key) if n.contains(key)]
+
+    def _pick_replica(self, key: str,
+                      nodes: List[StorageNode]) -> StorageNode:
+        """Rotate across resident replicas by this key's lookup count —
+        spreads concurrent fetches over the replicas' links while
+        staying a pure function of the access sequence (unlike e.g.
+        least-in-flight, which would make the event log clock-dependent
+        and break cross-environment determinism)."""
+        return nodes[self.hits_by_key.get(key, 0) % len(nodes)]
+
+    def _longest_cataloged(self, token_ids: np.ndarray, *,
+                           below: int) -> Optional[StoredPrefix]:
+        """Longest cataloged prefix of ``token_ids`` shorter than
+        ``below`` tokens (linear scan over the catalog; the catalog holds
+        registered prefixes, not per-request state, so it stays small)."""
+        best: Optional[StoredPrefix] = None
+        for e in self.catalog.values():
+            if e.token_ids is None or e.n_tokens >= below:
+                continue
+            if e.n_tokens > len(token_ids):
+                continue
+            if best is not None and e.n_tokens <= best.n_tokens:
+                continue
+            if np.array_equal(e.token_ids,
+                              np.asarray(token_ids[:e.n_tokens])):
+                best = e
+        return best
+
+    def _ancestor_chain(self, key: str) -> List[StoredPrefix]:
+        """``key``'s cataloged ancestors, nearest first (via ``parent``
+        links; used by the simulator where entries carry no token ids)."""
+        out: List[StoredPrefix] = []
+        cur = self.catalog.get(key)
+        seen = {key}
+        while cur is not None and cur.parent and cur.parent not in seen:
+            seen.add(cur.parent)
+            cur = self.catalog.get(cur.parent)
+            if cur is not None:
+                out.append(cur)
+        return out
+
+    def lookup(self, key: str, now: float,
+               requested_tokens: Optional[int] = None) -> StorageHit:
+        """Resolve a fetch for prefix ``key``: full hit if resident,
+        partial hit on the nearest resident ancestor, else miss (and —
+        with ``write_on_miss`` — re-admission from the catalog, modeling
+        the donor re-uploading after the recompute)."""
+        self.lookups += 1
+        want = self.catalog.get(key)
+        requested = (requested_tokens if requested_tokens is not None
+                     else (want.n_tokens if want else 0))
+        candidates = [want] if want else []
+        candidates += self._ancestor_chain(key)
+        for cand in candidates:
+            nodes = self._resident_nodes(cand.key)
+            if not nodes:
+                continue
+            node = self._pick_replica(cand.key, nodes)
+            node.get(cand.key, now)
+            self.hits_by_key[cand.key] = \
+                self.hits_by_key.get(cand.key, 0) + 1
+            full = cand.key == key and cand.n_tokens >= requested
+            kind = "full" if full else "partial"
+            self.events.append((kind, cand.key, node.node_id))
+            if full:
+                self.full_hits += 1
+            else:
+                self.partial_hits += 1
+            self._maybe_replicate(cand, now)
+            return StorageHit(kind=kind, requested_tokens=requested,
+                              covered_tokens=min(cand.n_tokens, requested),
+                              entry=cand, node=node)
+        self.misses += 1
+        self.events.append(("miss", key, ""))
+        if self.write_on_miss and want is not None:
+            self._place(want, self.primary_node(key), now)
+        return StorageHit(kind="miss", requested_tokens=requested)
+
+    def lookup_tokens(self, token_ids: np.ndarray,
+                      now: float) -> StorageHit:
+        """Longest-prefix-match lookup by token ids (live-engine path):
+        resolve the longest cataloged prefix of ``token_ids``, then fall
+        through :meth:`lookup` for residency/ancestors/replication."""
+        token_ids = np.asarray(token_ids)
+        best = self._longest_cataloged(token_ids,
+                                       below=len(token_ids) + 1)
+        if best is None:
+            self.lookups += 1
+            self.misses += 1
+            self.events.append(("miss", prefix_key(token_ids), ""))
+            return StorageHit(kind="miss",
+                              requested_tokens=len(token_ids))
+        return self.lookup(best.key, now,
+                           requested_tokens=len(token_ids))
+
+    def admit(self, key: str, now: float) -> bool:
+        """Re-admit a cataloged prefix onto its primary node (explicit
+        pull-through; :meth:`lookup` already does this on miss when
+        ``write_on_miss`` is set)."""
+        entry = self.catalog.get(key)
+        if entry is None:
+            return False
+        return self._place(entry, self.primary_node(key), now)
+
+    def _maybe_replicate(self, entry: StoredPrefix, now: float) -> None:
+        if self.placement != "popular":
+            return
+        if self.hits_by_key.get(entry.key, 0) < self.replicate_threshold:
+            return
+        for node in self._ring_nodes(entry.key)[1:]:
+            if not node.contains(entry.key):
+                if self._place(entry, node, now):
+                    self.events.append(("replicate", entry.key,
+                                        node.node_id))
+                return  # one replica per threshold crossing
+
+    # -- stats --------------------------------------------------------------
+    def hit_rate(self) -> float:
+        """Full+partial hits over all lookups (0.0 when no lookups)."""
+        if not self.lookups:
+            return 0.0
+        return (self.full_hits + self.partial_hits) / self.lookups
+
+    def stored_bytes(self) -> int:
+        return sum(n.used_bytes for n in self.nodes)
+
+
+# ---------------------------------------------------------------------------
+# Legacy single-node facade
+# ---------------------------------------------------------------------------
 
 
 class KVStore:
+    """The original flat in-process store, now a facade over one
+    unbounded :class:`StorageNode` — same API (register / lookup /
+    get_chunk return `KVManifest`\\ s), no capacity pressure, no network
+    placement.  Integration tests and the quickstart keep using it; the
+    multi-node tier above is the production-shaped path."""
+
     def __init__(self) -> None:
-        self.manifests: Dict[str, KVManifest] = {}
+        self.node = StorageNode("local", capacity_bytes=None)
+
+    @property
+    def manifests(self) -> Dict[str, KVManifest]:
+        return {k: r.entry.manifest for k, r in self.node.residents.items()
+                if r.entry.manifest is not None}
 
     def register(self, manifest: KVManifest) -> None:
-        self.manifests[manifest.prefix] = manifest
+        self.node.put(StoredPrefix.from_manifest(manifest), now=0.0)
 
     def register_prefix(self, token_ids: np.ndarray, kv_k: np.ndarray,
                         kv_v: np.ndarray, **kw) -> KVManifest:
-        key = prefix_key(token_ids)
+        key = prefix_key(np.asarray(token_ids))
         man = encode_prefix(kv_k, kv_v, prefix=key, **kw)
         self.register(man)
         return man
 
     def lookup(self, prefix: str) -> Optional[KVManifest]:
-        return self.manifests.get(prefix)
+        e = self.node.get(prefix, now=0.0)
+        return e.manifest if e is not None else None
 
     def get_chunk(self, prefix: str, chunk_id: str, resolution: str) -> bytes:
-        return self.manifests[prefix].blobs[(chunk_id, resolution)]
+        return self.node.residents[prefix].entry.manifest.blobs[
+            (chunk_id, resolution)]
 
     def stored_bytes(self) -> int:
-        return sum(len(b) for m in self.manifests.values()
-                   for b in m.blobs.values())
+        return self.node.stored_bytes()

@@ -10,7 +10,10 @@ diverge.  Per chunk the controller
     bandwidth estimate and decode-pool load,
   * transmits it over the shared link (`repro.cluster.network.SharedLink`
     arbitrates concurrent fetches; a bare `BandwidthTrace` is wrapped into
-    a single-flow link), retrying per-chunk on WAN loss: a transmission
+    a single-flow link) — or, with the multi-node storage tier, over the
+    *storage node's own* link passed per fetch via ``start(link=...)``,
+    so placement changes the observed path — retrying per-chunk on WAN
+    loss: a transmission
     attempt the `LossModel` drops is detected ``retransmit_timeout``
     seconds after its wire time and resent, while — in pipelined mode —
     later chunks keep streaming (selective repeat),
@@ -116,6 +119,10 @@ class ActiveFetch:
     plan: FetchPlan
     est: BandwidthEstimator
     trans_free_at: float
+    # the SharedLink this fetch transmits over: the controller's default
+    # link, or — multi-node storage tier — the storage node's own link,
+    # so placement decisions change the observed network path.
+    link: Optional[object] = None
     active_res: Optional[str] = None
     gpu_decomp_until: float = 0.0
     chunk_latencies: List[float] = dataclasses.field(default_factory=list)
@@ -197,13 +204,19 @@ class FetchController:
         return bool(self._events or self.active)
 
     # -- fetch lifecycle ----------------------------------------------------
-    def start(self, req: Request, plan: FetchPlan,
-              now: float) -> ActiveFetch:
+    def start(self, req: Request, plan: FetchPlan, now: float, *,
+              link=None) -> ActiveFetch:
+        """Begin fetching ``plan``.  ``link`` (optional) routes this fetch
+        over a specific `SharedLink` — e.g. the storage node holding the
+        prefix — instead of the controller's default link; per-fetch links
+        share this controller's event queue."""
         req.fetch_started = now
-        f = ActiveFetch(req, plan, BandwidthEstimator(self.bw.bw_at(now)),
-                        trans_free_at=now)
+        lnk = self.link if link is None else make_link(link)
+        lnk.bind(self._push)
+        f = ActiveFetch(req, plan, BandwidthEstimator(lnk.bw_at(now)),
+                        trans_free_at=now, link=lnk)
         self.active[req.rid] = f
-        self.link.open_flow(req.rid, weight=getattr(req, "weight", 1.0))
+        lnk.open_flow(req.rid, weight=getattr(req, "weight", 1.0))
         if self.config.blocking_fetch:
             self._start_blocking(f, now)
         else:
@@ -222,9 +235,9 @@ class FetchController:
             pc.resolution = res
             pc.t_transmit_start = now
             total += self._chunk_bytes(f, pc, res)
-        if self.link.loss is not None:
-            total /= max(1.0 - self.link.loss.mean_loss_rate(), 1e-3)
-        t_done = self.link.transmit(total, now)
+        if f.link.loss is not None:
+            total /= max(1.0 - f.link.loss.mean_loss_rate(), 1e-3)
+        t_done = f.link.transmit(total, now)
         if self.pool is not None:
             _, t_done = self.pool.decode(res, t_done,
                                          size_scale=len(f.plan.chunks))
@@ -298,7 +311,7 @@ class FetchController:
         pc.attempts = attempt
         if attempt == 1:
             pc.t_transmit_start = t_start
-        self.link.submit(
+        f.link.submit(
             f.req.rid, nbytes, t_start,
             lambda t, f=f, pc=pc, seq=seq, attempt=attempt, nbytes=nbytes,
             t_start=t_start: self._on_wire(f, pc, seq, attempt, nbytes,
@@ -313,7 +326,7 @@ class FetchController:
         way — selective repeat keeps the pipe busy during loss recovery."""
         if self.config.pipelined and attempt == 1:
             self._send_next(f, now)
-        loss = self.link.loss
+        loss = f.link.loss
         if (loss is not None and attempt < self.config.max_attempts
                 and loss.dropped(f.req.rid, seq, attempt)):
             f.pending_retx.add(seq)
@@ -368,7 +381,7 @@ class FetchController:
     def _finish(self, f: ActiveFetch, now: float) -> None:
         f.req.layers_ready = f.plan.layers_ready()
         self.active.pop(f.req.rid, None)
-        self.link.close_flow(f.req.rid)
+        f.link.close_flow(f.req.rid)
         self.sched.notify_fetch_done(f.req, now)
 
     # -- Appx A.3 layer-wise early admission --------------------------------

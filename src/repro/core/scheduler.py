@@ -41,6 +41,13 @@ class Request:
     weight: float = 1.0
 
     state: ReqState = ReqState.WAITING
+    # storage-tier resolution (set when a StorageCluster serves fetches):
+    # "full" | "partial" | "miss"; on a partial hit reuse_tokens is
+    # reduced to the resident ancestor's coverage and the original ask is
+    # preserved in requested_reuse_tokens (the tail is recomputed).
+    storage_hit: Optional[str] = None
+    storage_node: Optional[str] = None
+    requested_reuse_tokens: Optional[int] = None
     # fetch progress
     fetch_dispatched: bool = False  # scheduler handed it to the controller
     fetch_started: Optional[float] = None
@@ -101,6 +108,19 @@ class FetchingAwareScheduler:
         if req.state is ReqState.WAITING_FOR_KV:
             self.waiting_for_kv.remove(req)
             req.early_admitted = True
+            req.state = ReqState.WAITING
+            self.waiting.appendleft(req)
+
+    def notify_fetch_miss(self, req: Request, now: float) -> None:
+        """Storage-tier miss: nothing to fetch — the request falls back
+        to a full prefill.  It re-enters admission immediately (there is
+        no fetch to wait for); under ``fetch_agnostic`` it simply stops
+        blocking the queue head since ``needs_fetch`` turns False."""
+        req.requested_reuse_tokens = req.reuse_tokens
+        req.reuse_tokens = 0
+        req.storage_hit = "miss"
+        if req.state is ReqState.WAITING_FOR_KV:
+            self.waiting_for_kv.remove(req)
             req.state = ReqState.WAITING
             self.waiting.appendleft(req)
 

@@ -1,8 +1,11 @@
 """Workload generation: Poisson request traces with long-context prompts
 and a reuse threshold (paper §5.2: rate 0.2 req/s, >=40K-token prompts
-reuse remote KV), plus shared-prefix corpora for the live engine."""
+reuse remote KV), shared-prefix corpora for the live engine, and the
+Zipf-over-a-prefix-trie popularity workload the storage-tier benchmarks
+drive (docs/storage_tier.md)."""
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -37,6 +40,59 @@ def fixed_context_trace(context_len: int, *, n_requests: int = 4,
                     reuse_tokens=context_len - suffix_tokens,
                     prefix=f"pfx{i}", max_new_tokens=max_new_tokens)
             for i in range(n_requests)]
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixSpec:
+    """One node of the reusable-prefix trie: a registered prefix of
+    ``n_tokens`` tokens whose longest registered ancestor is ``parent``
+    (None for roots).  Children extend their parent's token sequence, so
+    a stored parent is a valid *partial* hit for a child's ask."""
+    key: str
+    n_tokens: int
+    parent: Optional[str] = None
+
+
+def prefix_trie_specs(n_roots: int, depth: int, *,
+                      base_tokens: int = 40_000,
+                      ext_tokens: int = 20_000) -> List[PrefixSpec]:
+    """A forest of prefix chains: ``n_roots`` roots of ``base_tokens``
+    tokens, each extended ``depth - 1`` times by ``ext_tokens`` (root ->
+    child -> grandchild ...).  Keys are deterministic (``trie.r2.d1``) so
+    seeded workloads replay identically everywhere."""
+    specs: List[PrefixSpec] = []
+    for r in range(n_roots):
+        parent = None
+        for d in range(depth):
+            key = f"trie.r{r}.d{d}"
+            specs.append(PrefixSpec(key=key,
+                                    n_tokens=base_tokens + d * ext_tokens,
+                                    parent=parent))
+            parent = key
+    return specs
+
+
+def zipf_prefix_trace(rng: np.random.Generator,
+                      specs: Sequence[PrefixSpec], *,
+                      n_requests: int = 24, alpha: float = 1.1,
+                      gap: float = 30.0, suffix_tokens: int = 1_000,
+                      max_new_tokens: int = 32) -> List[Request]:
+    """Requests whose prefix popularity follows a Zipf law over the trie:
+    spec ``i`` (0-based) is drawn with probability proportional to
+    ``(i + 1) ** -alpha``.  Each request asks to reuse its spec's full
+    prefix; whether that resolves to a full hit, a partial (ancestor)
+    hit, or a miss is the storage tier's call at fetch-dispatch time."""
+    ranks = np.arange(1, len(specs) + 1, dtype=np.float64)
+    p = ranks ** -alpha
+    p /= p.sum()
+    out: List[Request] = []
+    for rid in range(n_requests):
+        spec = specs[int(rng.choice(len(specs), p=p))]
+        out.append(Request(rid=rid, arrival=rid * gap,
+                           prompt_len=spec.n_tokens + suffix_tokens,
+                           reuse_tokens=spec.n_tokens, prefix=spec.key,
+                           max_new_tokens=max_new_tokens))
+    return out
 
 
 def shared_prefix_tokens(rng: np.random.Generator, vocab: int,

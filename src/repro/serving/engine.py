@@ -25,6 +25,12 @@ fetches split the trace via `repro.cluster.network.SharedLink` (weighted
 ``fair`` fluid sharing or ``drr`` chunk round-robin, ``link_policy=``)
 and a seeded ``loss=`` `LossModel` drops chunk attempts which the
 controller retransmits — restoration stays bit-exact, only timing moves.
+
+The ``store`` may be a flat `KVStore` or a multi-node `StorageCluster`
+(docs/storage_tier.md): with a cluster, every fetch resolves through a
+longest-prefix-match over the prompt tokens — full hit, partial
+(ancestor) hit with tail recompute, or miss with full-prefill fallback —
+and transmits over the serving node's own link.
 """
 from __future__ import annotations
 
@@ -48,7 +54,7 @@ from repro.core.scheduler import FetchingAwareScheduler, ReqState, Request
 from repro.cluster.costmodel import CHIPS, EngineCostModel
 from repro.cluster.decodepool import DecodePool
 from repro.cluster.network import LossModel, make_link
-from repro.cluster.storage import KVStore
+from repro.cluster.storage import StorageCluster
 from repro.models.attention import attend
 from repro.models.common import rms_norm
 from repro.models.transformer import lm_logits
@@ -89,7 +95,10 @@ class _EngineHooks(FetchHooks):
 class LiveEngine:
     """Single-node engine over a reduced dense model (real compute)."""
 
-    def __init__(self, params, cfg: ModelConfig, store: KVStore, *,
+    # ``store`` is a flat KVStore (single implicit node, unbounded) or a
+    # multi-node StorageCluster (capacity-bounded eviction, placement,
+    # longest-prefix-match partial hits — see docs/storage_tier.md).
+    def __init__(self, params, cfg: ModelConfig, store, *,
                  n_pages: int = 256, page_size: int = 16,
                  policy: str = "kvfetcher", max_running: int = 4,
                  resolution: str = "240p",
@@ -119,6 +128,12 @@ class LiveEngine:
             "bandwidth trace (virtual clock)"
         self.cost = cost
         self.ctrl: Optional[FetchController] = None
+        if isinstance(store, StorageCluster) and (loss is not None
+                                                  or link_policy is not None):
+            assert all(n.link is None for n in store.nodes), \
+                "loss=/link_policy= only shape the default link; nodes " \
+                "with their own links must carry their own LossModel/" \
+                "policy: StorageNode(link=make_link(trace, policy=, loss=))"
         if self.virtual:
             if self.cost is None:
                 self.cost = EngineCostModel(cfg, CHIPS["h20"], 1)
@@ -155,14 +170,37 @@ class LiveEngine:
 
     # -- fetch dispatch -------------------------------------------------------
     def _start_fetch(self, req: Request) -> None:
-        man = self.store.lookup(req.prefix)
+        """Resolve the request's prefix against the store and start the
+        fetch.  Against a multi-node `StorageCluster` the resolution is a
+        longest-prefix-match over the prompt tokens: a **full** hit
+        fetches the whole ask, a **partial** hit fetches the resident
+        *ancestor* manifest (the tail becomes extra suffix prefill — same
+        tokens, just more compute), and a **miss** falls back to a plain
+        full prefill; fetches route over the serving node's own link."""
+        link = None
+        if isinstance(self.store, StorageCluster):
+            tokens = self.prompts[req.rid][:req.reuse_tokens]
+            hit = self.store.lookup_tokens(tokens, self.now())
+            req.storage_hit = hit.kind
+            if hit.kind == "miss":
+                self.sched.notify_fetch_miss(req, self.now())
+                return
+            req.storage_node = hit.node.node_id
+            if hit.kind == "partial":
+                req.requested_reuse_tokens = req.reuse_tokens
+                req.reuse_tokens = hit.covered_tokens
+                req.prefix = hit.entry.key  # fetch the ancestor
+            man = hit.entry.manifest
+            link = hit.node.link
+        else:
+            man = self.store.lookup(req.prefix)
         assert man is not None, f"prefix {req.prefix} not registered"
         plan = build_plan(req.rid, man)
         self.cache.add_seq(req.rid, req.prompt_len + req.max_new_tokens)
         if self.ctrl is None:
             self._run_fetch_wall(req, plan)
             return
-        self.ctrl.start(req, plan, self.now())
+        self.ctrl.start(req, plan, self.now(), link=link)
         if self.fetch_mode == "sync":
             # blocking baseline: the engine idles until the (serialized)
             # pipeline finishes; the virtual clock absorbs the whole fetch

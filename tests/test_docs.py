@@ -23,3 +23,30 @@ def test_docs_exist_and_are_linked():
     assert (root / "docs" / "fetch_pipeline.md").exists()
     # ROADMAP points at the pipeline doc too (tentpole satellite)
     assert "docs/fetch_pipeline.md" in (root / "ROADMAP.md").read_text()
+    # storage tier doc: in the README architecture map and
+    # cross-referenced with the pipeline doc (so they cannot drift)
+    assert "docs/storage_tier.md" in readme
+    assert (root / "docs" / "storage_tier.md").exists()
+    assert "storage_tier.md" in \
+        (root / "docs" / "fetch_pipeline.md").read_text()
+    assert "fetch_pipeline.md" in \
+        (root / "docs" / "storage_tier.md").read_text()
+
+
+def test_checker_scans_docs_subdirectories(tmp_path, monkeypatch):
+    """Docs added under docs/<subdir>/ must be scanned, not silently
+    skipped (regression: the old glob was a flat docs/*.md)."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "tools"))
+    try:
+        import check_docs
+        (tmp_path / "docs" / "ops").mkdir(parents=True)
+        (tmp_path / "README.md").write_text("# readme\n")
+        (tmp_path / "docs" / "top.md").write_text("# top\n")
+        (tmp_path / "docs" / "ops" / "nested.md").write_text("# nested\n")
+        monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+        names = [p.relative_to(tmp_path).as_posix()
+                 for p in check_docs.doc_files()]
+        assert names == ["README.md", "docs/ops/nested.md", "docs/top.md"]
+    finally:
+        sys.path.pop(0)

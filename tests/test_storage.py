@@ -1,0 +1,518 @@
+"""Multi-node prefix storage tier (ISSUE 3 acceptance surface).
+
+Node-level tests cover byte-accurate capacity accounting and the three
+eviction policies; cluster-level tests cover consistent-hash placement,
+popularity replication, longest-prefix-match full/partial/miss
+resolution, and determinism of the event log under a seeded Zipf
+workload.  Integration tests drive the analytic simulator and the REAL
+live engine and assert (a) a partial hit produces tokens identical to a
+full recompute and (b) both environments replay the identical
+hit/miss/evict event sequence for the same access order.
+"""
+import numpy as np
+import pytest
+
+from repro.core.scheduler import FetchingAwareScheduler, ReqState, Request
+from repro.cluster.network import BandwidthTrace
+from repro.cluster.storage import (KVStore, StorageCluster, StorageNode,
+                                   StoredPrefix, synthetic_stored_prefix)
+from repro.data.workload import prefix_trie_specs, zipf_prefix_trace
+
+MB = 1_000_000
+
+
+def _entry(key, n_tokens=1000, size=10 * MB, parent=None):
+    return StoredPrefix(key=key, n_tokens=n_tokens,
+                        bytes_by_resolution={"240p": size},
+                        raw_kv_bytes=8 * size, parent=parent)
+
+
+# ---------------------------------------------------------------------------
+# StorageNode: capacity accounting + eviction policies
+# ---------------------------------------------------------------------------
+
+def test_node_capacity_accounting_per_resolution():
+    n = StorageNode("n0", capacity_bytes=100 * MB)
+    e = StoredPrefix("a", 100, {"240p": 10 * MB, "1080p": 30 * MB})
+    assert n.put(e, 0.0) == (True, [])
+    assert n.used_bytes == 40 * MB
+    assert n.bytes_by_resolution == {"240p": 10 * MB, "1080p": 30 * MB}
+    assert n.stored_bytes() == 40 * MB
+    # eviction returns the bytes
+    big = StoredPrefix("b", 100, {"240p": 70 * MB})
+    ok, evicted = n.put(big, 1.0)
+    assert ok and evicted == ["a"]
+    assert n.used_bytes == 70 * MB
+    assert n.bytes_by_resolution["1080p"] == 0
+
+
+def test_node_rejects_entry_larger_than_capacity():
+    n = StorageNode("n0", capacity_bytes=10 * MB)
+    n.put(_entry("a", size=8 * MB), 0.0)
+    ok, evicted = n.put(_entry("huge", size=20 * MB), 1.0)
+    assert not ok and evicted == []  # never flushes the node for a lost cause
+    assert n.contains("a") and n.stats.rejections == 1
+
+
+def test_node_lru_evicts_least_recently_used():
+    n = StorageNode("n0", capacity_bytes=30 * MB, policy="lru")
+    for i, k in enumerate(("a", "b", "c")):
+        n.put(_entry(k), float(i))
+    n.get("a", 10.0)  # refresh a
+    _, evicted = n.put(_entry("d"), 11.0)
+    assert evicted == ["b"]  # oldest untouched
+
+
+def test_node_lfu_keeps_frequent():
+    n = StorageNode("n0", capacity_bytes=30 * MB, policy="lfu")
+    for i, k in enumerate(("a", "b", "c")):
+        n.put(_entry(k), float(i))
+    for t in range(3):
+        n.get("a", 10.0 + t)
+    n.get("c", 20.0)  # recent but infrequent
+    _, evicted = n.put(_entry("d"), 21.0)
+    assert evicted == ["b"]  # 0 hits loses to recency
+
+
+def test_node_cost_keeps_bytes_saved_per_byte_stored():
+    """A proven-hot prefix survives a scan that flushes an LRU node."""
+    seq = [("hot", 0.0)] + [(f"scan{i}", float(i + 1)) for i in range(3)]
+    results = {}
+    for policy in ("lru", "cost"):
+        n = StorageNode("n0", capacity_bytes=30 * MB, policy=policy)
+        n.put(_entry("hot"), 0.0)
+        n.get("hot", 0.5)  # one hit: it has earned bytes-saved credit
+        for key, t in seq[1:]:
+            n.put(_entry(key), t)
+        results[policy] = n.contains("hot")
+    assert results["cost"] and not results["lru"]
+
+
+def test_node_cost_prefers_small_high_value_entries():
+    n = StorageNode("n0", capacity_bytes=30 * MB, policy="cost")
+    small = StoredPrefix("small", 100, {"240p": 5 * MB},
+                         raw_kv_bytes=50 * MB)
+    big = StoredPrefix("big", 100, {"240p": 25 * MB}, raw_kv_bytes=50 * MB)
+    n.put(small, 0.0)
+    n.put(big, 1.0)
+    n.get("small", 2.0)
+    n.get("big", 3.0)  # equal hits; big saves fewer bytes per byte stored
+    _, evicted = n.put(_entry("new", size=10 * MB), 4.0)
+    assert evicted == ["big"]
+
+
+def test_node_reregister_replaces_stale_entry():
+    """Re-registering a resident key must swap in the new artifact and
+    re-account its bytes (regression: the flat dict overwrote)."""
+    n = StorageNode("n0", capacity_bytes=100 * MB)
+    n.put(_entry("a", size=10 * MB), 0.0)
+    n.get("a", 1.0)
+    v2 = StoredPrefix("a", 1000, {"240p": 10 * MB, "480p": 15 * MB})
+    ok, evicted = n.put(v2, 2.0)
+    assert ok and not evicted
+    assert n.residents["a"].entry is v2
+    assert n.residents["a"].hits == 1  # same prefix: history kept
+    assert n.used_bytes == 25 * MB
+    assert n.bytes_by_resolution == {"240p": 10 * MB, "480p": 15 * MB}
+    assert n.stats.admissions == 1  # replacement, not a new admission
+
+
+def test_node_repr_is_human_readable():
+    n = StorageNode("n0", capacity_bytes=2e9, policy="cost")
+    n.put(_entry("a", size=500 * MB), 0.0)
+    r = repr(n)
+    assert "0.50/2.00 GB" in r and "cost" in r and "1 prefixes" in r
+    assert "unbounded" in repr(StorageNode("n1"))
+
+
+# ---------------------------------------------------------------------------
+# StorageCluster: placement, replication, LPM lookup, determinism
+# ---------------------------------------------------------------------------
+
+def _cluster(n_nodes=3, cap=35 * MB, policy="lru", **kw):
+    nodes = [StorageNode(f"n{i}", capacity_bytes=cap, policy=policy)
+             for i in range(n_nodes)]
+    return StorageCluster(nodes, **kw)
+
+
+def test_consistent_hash_placement_deterministic_and_spread():
+    keys = [f"k{i}" for i in range(60)]
+    c1, c2 = _cluster(cap=None), _cluster(cap=None)
+    assert [c1.primary_node(k).node_id for k in keys] == \
+        [c2.primary_node(k).node_id for k in keys]
+    used = {c1.primary_node(k).node_id for k in keys}
+    assert used == {"n0", "n1", "n2"}  # all nodes take keys
+
+
+def test_lookup_full_partial_miss_and_ancestor_chain():
+    c = _cluster(n_nodes=1, cap=25 * MB)
+    c.register(_entry("root", n_tokens=400, size=10 * MB), 0.0)
+    c.register(_entry("child", n_tokens=600, size=10 * MB,
+                      parent="root"), 1.0)
+    full = c.lookup("child", 2.0)
+    assert full.kind == "full" and full.covered_tokens == 600
+    assert full.node.node_id == "n0"
+    # make child the LRU victim, then squeeze it out
+    c.lookup("root", 2.5)
+    c.register(_entry("x", n_tokens=100, size=10 * MB), 3.0)
+    assert not c.nodes[0].contains("child")
+    assert c.nodes[0].contains("root")
+    partial = c.lookup("child", 5.0)
+    assert partial.kind == "partial"
+    assert partial.entry.key == "root" and partial.covered_tokens == 400
+    assert partial.requested_tokens == 600
+    miss = c.lookup("never-registered", 6.0)
+    assert miss.kind == "miss" and miss.entry is None
+
+
+def test_write_on_miss_readmits_from_catalog():
+    c = _cluster(n_nodes=1, cap=25 * MB)
+    c.register(_entry("a", size=10 * MB), 0.0)
+    c.register(_entry("b", size=10 * MB), 1.0)
+    c.register(_entry("c", size=10 * MB), 2.0)  # evicts a (lru)
+    assert not c.nodes[0].contains("a")
+    hit = c.lookup("a", 3.0)
+    assert hit.kind == "miss"
+    assert c.nodes[0].contains("a")  # pull-through re-admission
+    assert c.lookup("a", 4.0).kind == "full"
+
+
+def test_popularity_replication_spreads_hot_prefixes():
+    c = _cluster(cap=None, placement="popular", replicate_threshold=2)
+    c.register(_entry("hot"), 0.0)
+    c.register(_entry("cold"), 0.0)
+    for t in range(3):
+        assert c.lookup("hot", 1.0 + t).kind == "full"
+    holders = [n.node_id for n in c.nodes if n.contains("hot")]
+    assert len(holders) >= 2
+    assert ("replicate", "hot", holders[-1]) in c.events or \
+        any(ev[0] == "replicate" and ev[1] == "hot" for ev in c.events)
+    assert sum(1 for n in c.nodes if n.contains("cold")) == 1
+
+
+def test_lookup_tokens_longest_prefix_match():
+    c = _cluster(cap=None)
+    toks = np.arange(64)
+    root = StoredPrefix("root", 32, {"240p": MB},
+                        token_ids=toks[:32])
+    child = StoredPrefix("child", 48, {"240p": MB}, parent="root",
+                         token_ids=toks[:48])
+    c.register(root, 0.0)
+    c.register(child, 0.0)
+    full = c.lookup_tokens(toks[:48], 1.0)
+    assert full.kind == "full" and full.entry.key == "child"
+    # longer ask than any stored prefix: partial on the deepest ancestor
+    part = c.lookup_tokens(toks[:64], 2.0)
+    assert part.kind == "partial" and part.entry.key == "child"
+    assert part.covered_tokens == 48 and part.requested_tokens == 64
+    # diverging tokens match nothing
+    other = np.arange(100, 140)
+    assert c.lookup_tokens(other, 3.0).kind == "miss"
+
+
+def test_cluster_event_log_deterministic_under_seeded_zipf():
+    """Same seed, same sizes -> byte-identical event logs, with real
+    eviction pressure (the determinism the cross-env test relies on)."""
+    specs = prefix_trie_specs(3, 2, base_tokens=400, ext_tokens=200)
+
+    def run_once():
+        c = _cluster(n_nodes=2, cap=25 * MB, policy="cost")
+        for s in specs:
+            c.register(_entry(s.key, n_tokens=s.n_tokens, size=10 * MB,
+                              parent=s.parent), 0.0)
+        rng = np.random.default_rng(42)
+        reqs = zipf_prefix_trace(rng, specs, n_requests=30, alpha=1.2,
+                                 gap=1.0)
+        for r in reqs:
+            c.lookup(r.prefix, r.arrival + 1.0,
+                     requested_tokens=r.reuse_tokens)
+        return list(c.events)
+
+    e1, e2 = run_once(), run_once()
+    assert e1 == e2
+    assert any(ev[0] == "evict" for ev in e1), "no capacity pressure"
+    assert any(ev[0] in ("full", "partial") for ev in e1)
+
+
+def test_kvstore_facade_keeps_flat_api(synthetic_kv):
+    kv_k, kv_v, toks = synthetic_kv(8, 3, 2, 4)
+    store = KVStore()
+    man = store.register_prefix(toks, kv_k, kv_v, tokens_per_chunk=4,
+                                resolutions=("240p",))
+    assert store.lookup(man.prefix) is man
+    assert store.lookup("nope") is None
+    ref = man.refs[0]
+    assert store.get_chunk(man.prefix, ref.chunk_id, "240p") == \
+        man.blobs[(ref.chunk_id, "240p")]
+    assert store.stored_bytes() == sum(len(b) for b in man.blobs.values())
+
+
+# ---------------------------------------------------------------------------
+# scheduler handoff
+# ---------------------------------------------------------------------------
+
+def test_notify_fetch_miss_requeues_as_plain_prefill():
+    sched = FetchingAwareScheduler("kvfetcher", max_running=4)
+    req = Request(rid=0, arrival=0.0, prompt_len=1000, reuse_tokens=900,
+                  prefix="p")
+    sched.submit(req, 0.0)
+    sched.schedule(0.0)
+    assert req.state is ReqState.WAITING_FOR_KV
+    (fr,) = sched.take_fetches()
+    sched.notify_fetch_miss(fr, 1.0)
+    assert req.reuse_tokens == 0 and req.requested_reuse_tokens == 900
+    assert req.storage_hit == "miss"
+    assert req.state is ReqState.WAITING and not req.needs_fetch
+    (adm,) = sched.schedule(1.0)
+    assert adm is req
+
+
+def test_notify_fetch_miss_unblocks_fetch_agnostic_head():
+    sched = FetchingAwareScheduler("fetch_agnostic", max_running=4)
+    head = Request(rid=0, arrival=0.0, prompt_len=1000, reuse_tokens=900,
+                   prefix="p")
+    tail = Request(rid=1, arrival=0.0, prompt_len=100)
+    sched.submit(head, 0.0)
+    sched.submit(tail, 0.0)
+    assert sched.schedule(0.0) == []  # head blocks (HOL)
+    sched.take_fetches()
+    sched.notify_fetch_miss(head, 1.0)
+    assert sched.schedule(1.0) == [head, tail]
+
+
+# ---------------------------------------------------------------------------
+# simulator integration
+# ---------------------------------------------------------------------------
+
+def _sim(storage, requests, **kw):
+    from repro.configs import get_config
+    from repro.core.adaptive import H20_TABLE
+    from repro.cluster.simulator import ServingSimulator, kvfetcher_spec
+
+    cfg = get_config("yi-34b")
+    ratios = {"240p": 9.0, "480p": 8.5, "640p": 8.0, "1080p": 7.0}
+    sim = ServingSimulator(cfg, kvfetcher_spec(ratios), chip="h20",
+                           n_chips=2,
+                           bandwidth=BandwidthTrace.constant(8.0),
+                           storage=storage, table=H20_TABLE, **kw)
+    return sim.run(requests, max_new_tokens=4), cfg
+
+
+def _sim_cluster(cfg, specs, *, n_nodes=3, cap_fraction=None,
+                 policy="lru", gbps=8.0, **kw):
+    """Cluster of synthetic entries; each node's capacity is
+    ``cap_fraction`` of the library's total bytes (None = unbounded)."""
+    ratios = {"240p": 9.0, "480p": 8.5, "640p": 8.0, "1080p": 7.0}
+    entries = [synthetic_stored_prefix(
+        s.key, s.n_tokens, raw_bytes_per_token=cfg.kv_bytes_per_token(),
+        ratios=ratios, parent=s.parent) for s in specs]
+    total = sum(e.stored_bytes for e in entries)
+    cap = None if cap_fraction is None else int(total * cap_fraction)
+    nodes = [StorageNode(f"n{i}", capacity_bytes=cap, policy=policy,
+                         link=BandwidthTrace.constant(gbps))
+             for i in range(n_nodes)]
+    cluster = StorageCluster(nodes, **kw)
+    for e in entries:
+        cluster.register(e, 0.0)
+    return cluster
+
+
+def test_sim_full_partial_miss_paths_complete():
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(2, 2, base_tokens=40_000, ext_tokens=20_000)
+    cluster = _sim_cluster(cfg, specs)
+    # evict exactly one child so its request becomes a partial hit
+    child = specs[1].key
+    node = next(n for n in cluster.nodes if n.contains(child))
+    node._drop(child)
+    reqs = [
+        Request(rid=0, arrival=10.0, prompt_len=41_000,
+                reuse_tokens=40_000, prefix=specs[0].key),  # full
+        Request(rid=1, arrival=200.0, prompt_len=61_000,
+                reuse_tokens=60_000, prefix=child),         # partial
+        Request(rid=2, arrival=400.0, prompt_len=61_000,
+                reuse_tokens=60_000, prefix="unknown"),     # miss
+    ]
+    res, _ = _sim(cluster, reqs)
+    assert [r.storage_hit for r in reqs] == ["full", "partial", "miss"]
+    assert all(r.t_first_token is not None for r in reqs)
+    part = reqs[1]
+    assert part.reuse_tokens == 40_000  # ancestor coverage
+    assert part.requested_reuse_tokens == 60_000
+    assert part.storage_node == node.node_id or part.storage_node
+    miss = reqs[2]
+    assert miss.reuse_tokens == 0 and not miss.needs_fetch
+    # a miss pays full prefill: slowest TTFT of the three
+    assert miss.ttft > part.ttft > reqs[0].ttft
+
+
+def test_sim_fetch_routes_over_storage_node_link():
+    """Same request, same default link — only the storage node's own
+    link differs, so the TTFT gap proves per-node routing."""
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(1, 1, base_tokens=50_000)
+    ttfts = {}
+    for gbps in (16.0, 1.0):
+        cluster = _sim_cluster(cfg, specs, gbps=gbps)
+        req = Request(rid=0, arrival=1.0, prompt_len=51_000,
+                      reuse_tokens=50_000, prefix=specs[0].key)
+        _sim(cluster, [req])
+        ttfts[gbps] = req.ttft
+    assert ttfts[1.0] > 2.0 * ttfts[16.0]
+
+
+def test_sim_eviction_policies_diverge_and_are_deterministic():
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(3, 2, base_tokens=40_000,
+                              ext_tokens=20_000)
+    hits = {}
+    events = {}
+    for policy in ("lru", "cost"):
+        runs = []
+        for _ in range(2):
+            cluster = _sim_cluster(cfg, specs, n_nodes=1,
+                                   cap_fraction=0.35, policy=policy)
+            rng = np.random.default_rng(42)
+            reqs = zipf_prefix_trace(rng, specs, n_requests=30,
+                                     alpha=1.1, gap=120.0,
+                                     max_new_tokens=4)
+            _sim(cluster, reqs)
+            runs.append(list(cluster.events))
+            hits[policy] = cluster.hit_rate()
+        assert runs[0] == runs[1], f"{policy} events nondeterministic"
+        events[policy] = runs[0]
+        assert any(e[0] == "evict" for e in runs[0])
+    assert events["lru"] != events["cost"]
+    # the cost policy retains proven-hot prefixes the LRU flushes
+    assert hits["cost"] > hits["lru"]
+
+
+# ---------------------------------------------------------------------------
+# live engine integration (real model, real codec)
+# ---------------------------------------------------------------------------
+
+def _live_cluster(donor_kv, token_sets, *, cap=None, policy="lru",
+                  n_nodes=1):
+    nodes = [StorageNode(f"n{i}", capacity_bytes=cap, policy=policy)
+             for i in range(n_nodes)]
+    cluster = StorageCluster(nodes)
+    for toks in token_sets:
+        kv_k, kv_v = donor_kv(toks)
+        cluster.register_prefix(toks, kv_k, kv_v, tokens_per_chunk=16,
+                                resolutions=("240p",))
+    return cluster
+
+
+def test_live_partial_hit_matches_full_recompute(tiny_cfg, tiny_params,
+                                                 donor_kv):
+    """Acceptance: ancestor fetch + tail recompute emits tokens identical
+    to a full recompute of the same prompt."""
+    from repro.serving.engine import LiveEngine
+
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, tiny_cfg.vocab_size, 72)
+    # only the 48-token ancestor of the 64-token ask is registered
+    cluster = _live_cluster(donor_kv, [prompt[:48]])
+    eng = LiveEngine(tiny_params, tiny_cfg, cluster, resolution="240p")
+    req = eng.submit(prompt, reuse_prefix="by-tokens", reuse_tokens=64,
+                     max_new_tokens=4)
+    eng.run()
+    assert req.storage_hit == "partial"
+    assert req.reuse_tokens == 48 and req.requested_reuse_tokens == 64
+    assert cluster.partial_hits == 1
+
+    ref = LiveEngine(tiny_params, tiny_cfg, KVStore(), resolution="240p")
+    ref_req = ref.submit(prompt, max_new_tokens=4)
+    ref.run()
+    assert eng.outputs[req.rid] == ref.outputs[ref_req.rid]
+
+
+def test_live_miss_falls_back_to_full_prefill(tiny_cfg, tiny_params,
+                                              donor_kv):
+    from repro.serving.engine import LiveEngine
+
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, tiny_cfg.vocab_size, 40)
+    other = rng.integers(0, tiny_cfg.vocab_size, 32)
+    cluster = _live_cluster(donor_kv, [other])
+    eng = LiveEngine(tiny_params, tiny_cfg, cluster, resolution="240p")
+    req = eng.submit(prompt, reuse_prefix="by-tokens", reuse_tokens=32,
+                     max_new_tokens=4)
+    eng.run()
+    assert req.storage_hit == "miss" and req.reuse_tokens == 0
+    assert len(eng.outputs[req.rid]) == 4
+
+    ref = LiveEngine(tiny_params, tiny_cfg, KVStore(), resolution="240p")
+    ref_req = ref.submit(prompt, max_new_tokens=4)
+    ref.run()
+    assert eng.outputs[req.rid] == ref.outputs[ref_req.rid]
+
+
+@pytest.mark.slow
+def test_cross_env_hit_miss_evict_sequences_agree(tiny_cfg, tiny_params,
+                                                  donor_kv):
+    """Simulator and LiveEngine drive identically-configured clusters
+    through the same access order and must log the identical
+    admit/evict/hit/partial/miss event sequence."""
+    from repro.cluster.simulator import MethodSpec, ServingSimulator
+    from repro.serving.engine import LiveEngine
+
+    rng = np.random.default_rng(5)
+    base = rng.integers(0, tiny_cfg.vocab_size, 48)
+    other = rng.integers(0, tiny_cfg.vocab_size, 32)
+    tok_a, tok_b, tok_c = base[:32], base[:48], other
+
+    # live side: real manifests, capacity fits 2 of the 3 entries
+    sizes = {}
+    probe = _live_cluster(donor_kv, [tok_a, tok_b, tok_c])
+    for key, e in probe.catalog.items():
+        sizes[key] = e.stored_bytes
+    cap = int(sorted(sizes.values())[-1] + sorted(sizes.values())[-2] + 1)
+    live = StorageCluster([StorageNode("n0", capacity_bytes=cap,
+                                       policy="lru")])
+    for toks in (tok_a, tok_b, tok_c):
+        kv_k, kv_v = donor_kv(toks)
+        live.register_prefix(toks, kv_k, kv_v, tokens_per_chunk=16,
+                             resolutions=("240p",))
+    keys = list(live.catalog)  # registration order: a, b, c
+    eng = LiveEngine(tiny_params, tiny_cfg, live, resolution="240p")
+    suffix = rng.integers(0, tiny_cfg.vocab_size, 8)
+    # access order: c (hit), a (likely evicted), b, c — write-on-miss
+    # re-admissions keep the pressure on
+    for toks in (tok_c, tok_a, tok_b, tok_c):
+        eng.submit(np.concatenate([toks, suffix]),
+                   reuse_prefix="by-tokens", reuse_tokens=len(toks),
+                   max_new_tokens=2)
+        eng.run()
+
+    # simulator side: synthetic entries with the live sizes and parents
+    sim_nodes = [StorageNode("n0", capacity_bytes=cap, policy="lru")]
+    sim_cluster = StorageCluster(sim_nodes)
+    for key in keys:
+        src = live.catalog[key]
+        sim_cluster.register(StoredPrefix(
+            key=key, n_tokens=src.n_tokens,
+            bytes_by_resolution={"240p": src.stored_bytes},
+            raw_kv_bytes=src.raw_kv_bytes, parent=src.parent), 0.0)
+    key_of = {len(tok_a): keys[0], len(tok_b): keys[1]}
+    order = [keys[2], keys[0], keys[1], keys[2]]
+    lens = [len(tok_c), len(tok_a), len(tok_b), len(tok_c)]
+    reqs = [Request(rid=i, arrival=(i + 1) * 50.0,
+                    prompt_len=lens[i] + 8, reuse_tokens=lens[i],
+                    prefix=order[i], max_new_tokens=2)
+            for i in range(4)]
+    spec = MethodSpec("kvfetcher", ratios={"stream": 8.0}, adaptive=False,
+                      fixed_resolution="240p", uses_decode_pool=False)
+    sim = ServingSimulator(tiny_cfg, spec,
+                           bandwidth=BandwidthTrace.constant(0.01),
+                           storage=sim_cluster, chunk_tokens=16)
+    sim.run(reqs, max_new_tokens=2)
+
+    assert live.events == sim_cluster.events
+    kinds = [e[0] for e in live.events]
+    assert "miss" in kinds and "evict" in kinds, \
+        "sequence exercised no pressure; test is vacuous"
+    assert key_of  # silence unused (kept for debugging readability)

@@ -29,7 +29,9 @@ import sys
 from typing import List, Tuple
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
-DOC_GLOBS = ["README.md", "docs/*.md"]
+# ``**`` so docs added in subdirectories (docs/ops/x.md, ...) are
+# scanned too instead of silently skipped
+DOC_GLOBS = ["README.md", "docs/**/*.md"]
 FENCE = re.compile(r"^```(\w*)\s*$")
 LINK = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
 
