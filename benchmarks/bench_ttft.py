@@ -23,7 +23,16 @@ over a prefix trie compares eviction policies (cost-aware must beat LRU
 on mean TTFT — it retains hot prefixes the LRU flushes), placement
 policies (popularity replication vs plain consistent hashing under
 contention), and a live-engine partial hit whose ancestor-fetch +
-tail-recompute output must equal a full recompute token-for-token."""
+tail-recompute output must equal a full recompute token-for-token.
+
+The ``ttft.storage.failover.*`` rows kill 1 of 3 storage nodes
+mid-trace (ISSUE 4): with replication>=2 the mean post-failure TTFT
+must stay within 30% of the no-failure run (the ring heal streams over
+the nodes' own links and contends with live fetches), while the
+unreplicated cluster pays full-prefill TTFT for the lost prefix until
+heal / delayed write-on-miss restore it.  The derived speedup ratios
+across all ttft rows are regression-gated in CI by
+``tools/check_bench.py`` against ``benchmarks/baselines.json``."""
 from __future__ import annotations
 
 import dataclasses
@@ -32,6 +41,7 @@ from typing import List
 from benchmarks.common import Row
 from repro.configs import get_config
 from repro.core.adaptive import H20_TABLE, DecodeTable
+from repro.core.scheduler import Request
 from repro.cluster.network import BandwidthTrace, LossModel
 from repro.cluster.simulator import (
     ServingSimulator, cachegen_spec, full_prefill_spec, kvfetcher_spec,
@@ -287,6 +297,93 @@ def _storage_rows() -> List[Row]:
     return rows
 
 
+def _storage_failover_rows() -> List[Row]:
+    """Fault tolerance under 1-of-3 node failure (ISSUE 4 acceptance):
+    with replication>=2 the surviving replica keeps serving — mean TTFT
+    over the post-failure window degrades by <30% (the only penalty is
+    the link-heal contention the first request rides through) — while
+    the unreplicated cluster pays a full-prefill TTFT for the lost
+    prefix until ring heal / delayed write-on-miss restore it."""
+    from repro.cluster.storage import (StorageCluster, StorageNode,
+                                       synthetic_stored_prefix)
+    from repro.data.workload import prefix_trie_specs
+
+    spec = prefix_trie_specs(1, 1, base_tokens=40_000)[0]
+    entry_of = lambda: synthetic_stored_prefix(  # noqa: E731
+        spec.key, spec.n_tokens,
+        raw_bytes_per_token=CFG.kv_bytes_per_token(), ratios=RATIOS)
+    arrivals = (10.0, 301.0, 390.0, 480.0)  # 301 lands mid-heal
+
+    def run_case(replication: int, fail: bool):
+        nodes = [StorageNode(f"n{i}", link=BandwidthTrace.constant(8.0))
+                 for i in range(3)]
+        cluster = StorageCluster(nodes, replication=replication,
+                                 heal="link")
+        cluster.register(entry_of(), 0.0)
+        victim = cluster.primary_node(spec.key).node_id
+        reqs = [dataclasses.replace(r, prefix=spec.key,
+                                    reuse_tokens=spec.n_tokens,
+                                    arrival=arrivals[i])
+                for i, r in enumerate(fixed_context_trace(
+                    spec.n_tokens + 1_000, n_requests=4, gap=1.0,
+                    max_new_tokens=4))]
+        sim = ServingSimulator(CFG, kvfetcher_spec(RATIOS), chip="h20",
+                               n_chips=2,
+                               bandwidth=BandwidthTrace.constant(8.0),
+                               storage=cluster, table=H20_TABLE,
+                               fail_at=[(300.0, victim)] if fail else None)
+        sim.run(reqs, max_new_tokens=4)
+        return reqs, cluster
+
+    rows: List[Row] = []
+    nofail, _ = run_case(2, fail=False)
+    repl, repl_cluster = run_case(2, fail=True)
+    unrepl, unrepl_cluster = run_case(1, fail=True)
+    # full-prefill reference: the same prompt with nothing to reuse
+    ref_sim = ServingSimulator(CFG, kvfetcher_spec(RATIOS), chip="h20",
+                               n_chips=2,
+                               bandwidth=BandwidthTrace.constant(8.0),
+                               table=H20_TABLE)
+    ref = Request(rid=0, arrival=301.0, prompt_len=spec.n_tokens + 1_000,
+                  reuse_tokens=0, max_new_tokens=4)
+    ref_sim.run([ref], max_new_tokens=4)
+
+    post = lambda reqs: [r.ttft for r in reqs[1:]]  # noqa: E731
+    nofail_mean = sum(post(nofail)) / 3
+    repl_mean = sum(post(repl)) / 3
+    lost = unrepl[1]  # the ask that arrived 1s after the failure
+
+    assert all(r.storage_hit == "full" for r in repl), \
+        "replication=2 must serve every ask through the failure"
+    assert repl_mean < 1.3 * nofail_mean, \
+        (f"replicated post-failure mean TTFT degraded "
+         f"{repl_mean / nofail_mean:.2f}x (acceptance: <1.3x)")
+    assert lost.storage_hit == "miss", \
+        "unreplicated cluster must lose the prefix with its only node"
+    assert lost.ttft > 0.9 * ref.ttft, \
+        (f"lost-prefix TTFT {lost.ttft:.2f}s should be full-prefill "
+         f"class (~{ref.ttft:.2f}s)")
+    assert unrepl[3].storage_hit == "full", \
+        "ring heal / write-on-miss never restored the lost prefix"
+    assert any(e[0] == "heal" for e in repl_cluster.events)
+    assert any(e[0] == "heal" for e in unrepl_cluster.events)
+
+    rows.append(("ttft.storage.failover.nofail_mean", nofail_mean * 1e6,
+                 nofail_mean))
+    rows.append(("ttft.storage.failover.replicated_mean", repl_mean * 1e6,
+                 repl_mean))
+    rows.append(("ttft.storage.failover.unreplicated_lost",
+                 lost.ttft * 1e6, lost.ttft))
+    rows.append(("ttft.storage.failover.full_prefill_ref",
+                 ref.ttft * 1e6, ref.ttft))
+    # gated ratios (tools/check_bench.py): higher is better
+    rows.append(("ttft.storage.failover.retained_replicated", 0.0,
+                 nofail_mean / repl_mean))
+    rows.append(("ttft.storage.failover.speedup_replicated_vs_unreplicated",
+                 0.0, lost.ttft / repl[1].ttft))
+    return rows
+
+
 def _storage_live_rows() -> List[Row]:
     """Real engine against a 2-node StorageCluster: only the 64-token
     ancestor of the 96-token ask is registered, so the lookup is a
@@ -351,6 +448,7 @@ def run() -> List[Row]:
                          f".ctx{ctx // 1000}k", 0.0, base / ours))
     rows.extend(_wan_sim_rows())
     rows.extend(_storage_rows())
+    rows.extend(_storage_failover_rows())
     rows.extend(_live_rows())
     rows.extend(_wan_live_rows())
     rows.extend(_storage_live_rows())

@@ -8,6 +8,9 @@ Part two exercises the multi-node prefix storage tier
 (docs/storage_tier.md): a 3-node capacity-bounded cluster — each node
 with its own WAN link — serving a seeded Zipf workload over a prefix
 trie, with full hits, partial (ancestor) hits, misses, and evictions.
+Part three kills 1 of 3 nodes mid-trace: with replication=2 the ring
+heal keeps TTFT near baseline, unreplicated prefixes fall back to full
+prefill until re-replication restores them.
 
     PYTHONPATH=src python examples/simulate_cluster.py
 """
@@ -15,6 +18,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.adaptive import H20_TABLE
+from repro.core.scheduler import Request
 from repro.cluster.network import BandwidthTrace
 from repro.cluster.simulator import (
     ServingSimulator, cachegen_spec, full_prefill_spec, kvfetcher_spec,
@@ -77,6 +81,40 @@ def storage_tier_demo() -> None:
     print(f"  mean TTFT {summarize(reqs)['ttft_mean']:.2f}s")
 
 
+def failover_demo() -> None:
+    """Part three: kill 1 of 3 nodes mid-trace.  With replication=2 the
+    surviving replica keeps serving (the ring heal streams the lost
+    copy over the survivor's link, contending with live fetches); with
+    replication=1 the lost prefix pays a full prefill until healed."""
+    spec = prefix_trie_specs(1, 1, base_tokens=40_000)[0]
+    print("\n1-of-3 node failure at t=300s (40K-token prefix, "
+          "8 Gbps links, heal='link'):")
+    for repl in (2, 1):
+        nodes = [StorageNode(f"n{i}", link=BandwidthTrace.constant(8.0))
+                 for i in range(3)]
+        cluster = StorageCluster(nodes, replication=repl, heal="link")
+        cluster.register(synthetic_stored_prefix(
+            spec.key, spec.n_tokens,
+            raw_bytes_per_token=CFG.kv_bytes_per_token(),
+            ratios=RATIOS), 0.0)
+        victim = cluster.primary_node(spec.key).node_id
+        reqs = [Request(rid=i, arrival=t, prompt_len=spec.n_tokens + 1_000,
+                        reuse_tokens=spec.n_tokens, prefix=spec.key,
+                        max_new_tokens=4)
+                for i, t in enumerate((10.0, 301.0, 390.0, 480.0))]
+        sim = ServingSimulator(CFG, kvfetcher_spec(RATIOS), chip="h20",
+                               n_chips=2,
+                               bandwidth=BandwidthTrace.constant(8.0),
+                               storage=cluster, table=H20_TABLE,
+                               fail_at=[(300.0, victim)])
+        sim.run(reqs, max_new_tokens=4)
+        hits = "/".join(r.storage_hit for r in reqs)
+        heals = sum(1 for e in cluster.events if e[0] == "heal")
+        print(f"  replication={repl}: kill {victim} -> {hits}, "
+              f"{heals} heal(s); TTFT "
+              + " ".join(f"{r.ttft:.1f}s" for r in reqs))
+
+
 def main() -> None:
     print(f"model {CFG.name} on 2x H20, context 100K, 16 Gbps")
     print(f"{'method':>15} {'TTFT(s)':>9} {'poolUtil':>9} {'buf(MB)':>8}")
@@ -93,6 +131,7 @@ def main() -> None:
         print(f"{name:>15} {t:9.2f} {res.decode_pool_utilization:9.2f} "
               f"{res.decompress_buffer_high_water / 1e6:8.1f}")
     storage_tier_demo()
+    failover_demo()
     print("OK")
 
 

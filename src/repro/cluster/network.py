@@ -33,6 +33,15 @@ import numpy as np
 #: bytes/sec per Gbps (all internal rates are bytes/sec).
 GBPS = 1e9 / 8.0
 
+#: Default arbitration weight for storage-tier *heal* (re-replication)
+#: flows on a SharedLink.  Heal traffic shares the same links live
+#: fetches ride (`StorageCluster` with ``heal="link"``); joining at
+#: half weight keeps recovery from doubling the tail TTFT of requests
+#: in flight while the ring re-converges — under ``fair`` a heal flow
+#: gets weight/total_weight of the trace, under ``drr`` proportionally
+#: fewer bytes per round (see `SharedLink`).
+HEAL_WEIGHT = 0.5
+
 
 @dataclasses.dataclass(repr=False)
 class BandwidthTrace:

@@ -15,7 +15,12 @@ on real KV tensors.
 With ``storage=`` a multi-node prefix tier (storage.py,
 docs/storage_tier.md) resolves every fetch before it starts: full hits
 fetch over the serving node's own link, partial hits fetch the resident
-ancestor and recompute the tail, misses fall back to a full prefill.
+ancestor and recompute the tail, misses fall back to a full prefill —
+and the tier's delayed write-on-miss re-admits the prefix only once
+that prefill reaches its first token.  ``fail_at=[(t, node_id)]`` /
+``recover_at=`` script node churn mid-run: failed nodes' keys re-route
+to ring successors and re-replication heals stream over the nodes' own
+links, contending with live fetches (ttft.storage.failover.* rows).
 
 Methods modeled (paper §5.1 baselines):
   kvfetcher    video codec (ours), adaptive res, fetch-aware sched,
@@ -32,7 +37,7 @@ Methods modeled (paper §5.1 baselines):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -184,6 +189,10 @@ class ServingSimulator:
                  loss: Optional[LossModel] = None,
                  link_policy: Optional[str] = None,  # None -> "fair"
                  storage: Optional[StorageCluster] = None,
+                 # scripted storage-node churn: fail_at=[(t, node_id)]
+                 # kills nodes mid-run, recover_at brings them back
+                 fail_at: Optional[List[Tuple[float, str]]] = None,
+                 recover_at: Optional[List[Tuple[float, str]]] = None,
                  table: Optional[DecodeTable] = None,
                  chunk_tokens: int = 10_000,
                  prefill_chunk: int = 2048,
@@ -225,6 +234,16 @@ class ServingSimulator:
                 use_table_sizes=method.use_table_sizes,
                 resolutions=RESOLUTIONS),
             hooks=_SimHooks(self))
+        # scripted node churn, merged and time-ordered; heal transfers
+        # (heal="link") schedule their completions on the controller's
+        # event queue so they contend with live fetches
+        assert not (fail_at or recover_at) or storage is not None, \
+            "fail_at/recover_at need a storage cluster"
+        self._churn: List[Tuple[float, str, str]] = sorted(
+            [(t, "fail", nid) for t, nid in (fail_at or [])]
+            + [(t, "recover", nid) for t, nid in (recover_at or [])])
+        if storage is not None:
+            storage.bind(self.ctrl.push_event)
         # per-request engine progress
         self.prefill_remaining: Dict[int, int] = {}
         self.context_done: Dict[int, int] = {}
@@ -260,6 +279,7 @@ class ServingSimulator:
                                   requested_tokens=req.reuse_tokens)
         req.storage_hit = hit.kind
         if hit.kind == "miss":
+            req.storage_miss_key = hit.missed_key
             self.sched.notify_fetch_miss(req, now)
             return True
         req.storage_node = hit.node.node_id
@@ -280,6 +300,14 @@ class ServingSimulator:
             self.prefill_remaining[req.rid] = req.prompt_len
             self.context_done[req.rid] = 0
         while now < horizon:
+            # scripted node churn due by `now` (before arrivals, so a
+            # request arriving at the failure instant sees the new ring)
+            while self._churn and self._churn[0][0] <= now:
+                t, kind, nid = self._churn.pop(0)
+                if kind == "fail":
+                    self.storage.fail_node(nid, t)
+                else:
+                    self.storage.recover_node(nid, t)
             # admit arrivals and process pipeline events up to `now`
             while ai < len(arrivals) and arrivals[ai].arrival <= now:
                 r = arrivals[ai]
@@ -325,13 +353,19 @@ class ServingSimulator:
                                for r in decodes])
                 step += self.cost.decode_step_time(len(decodes), ctx)
             if step == 0.0:
-                # idle: jump to the next event/arrival
+                # idle: jump to the next event/arrival/churn instant
                 nxt = []
                 t_ev = self.ctrl.next_event_time()
                 if t_ev is not None:
                     nxt.append(t_ev)
                 if ai < len(arrivals):
                     nxt.append(arrivals[ai].arrival)
+                if self._churn:
+                    # churn fires at its scheduled instant even after
+                    # the last arrival: an in-flight fetch must see the
+                    # heal-flow contention, and recover_at entries must
+                    # execute so the cluster's post-run state is honest
+                    nxt.append(self._churn[0][0])
                 if not nxt:
                     break
                 now = max(now, min(nxt))
@@ -350,6 +384,12 @@ class ServingSimulator:
                     req.t_first_token = tnow
                     req.tokens_out = 1
                     req.token_times.append(tnow)
+                    if (req.storage_hit == "miss" and self.storage
+                            and req.storage_miss_key):
+                        # delayed write-on-miss: the recomputed KV
+                        # exists from this instant, not from lookup time
+                        self.storage.notify_recompute_done(
+                            req.storage_miss_key, tnow)
             for req in decodes:
                 if req.t_first_token is None:  # zero-suffix fetch request
                     req.t_first_token = tnow

@@ -23,12 +23,40 @@ subsystem with three pieces:
     misses (recompute everything; the prefix is re-admitted from the
     durable catalog — a pull-through cache).
 
+The tier is **fault-tolerant and admission-controlled** (ISSUE 4):
+
+  * :meth:`StorageNode.fail` / :meth:`StorageNode.recover` model node
+    churn — a failed node loses its residents (the catalog is the
+    durable origin) and leaves the ring until it recovers.
+  * **Ring heal**: :meth:`StorageCluster.fail_node` re-routes the failed
+    node's keys to their ring successors and enqueues re-replication
+    tasks that restore the replication factor from surviving replicas
+    (or the durable catalog when none survive).  With ``heal="link"``
+    each heal transfer rides the source node's own `SharedLink` at
+    :data:`repro.cluster.network.HEAL_WEIGHT`, so heal traffic contends
+    with live fetches; ``heal="sync"`` (default) completes heals
+    immediately — clock-free, for cross-environment replay tests.
+  * **TTL + pinning**: a :class:`StoredPrefix` may carry ``ttl`` seconds
+    (enforced lazily at lookup and eagerly at the eviction scan) and a
+    ``pinned`` flag (never evicted, never expired).
+  * **Delayed write-on-miss**: a miss no longer re-admits immediately —
+    the environment calls :meth:`StorageCluster.notify_recompute_done`
+    when the fallback full prefill actually completes (hooked from the
+    `FetchingAwareScheduler.notify_fetch_miss` resolution), modeling the
+    donor re-uploading only after the KV exists again.
+  * **Admission control** decides what gets stored at all:
+    ``admission="second_hit"`` admits a prefix only once it has been
+    asked for ``admission_min_asks`` times; ``admission="cost"`` gates
+    on the projected bytes-saved-per-byte-stored score.  Declined
+    writes log ``reject`` events.
+
 The cluster's :attr:`StorageCluster.events` log records every admit /
-evict / hit / partial / miss / replicate decision in order.  All
-decisions are pure functions of the access sequence and entry sizes (no
-internal RNG), so the analytic simulator and the live engine replay the
+evict / hit / partial / miss / replicate / fail / heal / recover /
+expire / reject decision in order.  All decisions are pure functions of
+the access sequence, entry sizes, and the churn schedule (no internal
+RNG), so the analytic simulator and the live engine replay the
 *identical* event sequence for the same workload — tested in
-``tests/test_storage.py``.
+``tests/test_storage.py``, including a node failure mid-trace.
 
 Units
 -----
@@ -44,12 +72,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
 from repro.core.chunks import KVManifest, encode_prefix, prefix_key
-from repro.cluster.network import make_link
+from repro.cluster.network import HEAL_WEIGHT, make_link
 
 #: bytes per gigabyte, for constructors/repr (internal unit is bytes).
 GB = 1e9
@@ -74,6 +102,14 @@ class StoredPrefix:
     forming the trie that longest-prefix-match lookups walk.
     ``manifest``/``token_ids`` are present on the live path and absent
     for the simulator's synthetic entries.
+
+    ``ttl`` (seconds, None = immortal) bounds residency measured from
+    the entry's ``stored_at`` time: a stale copy is dropped lazily at
+    the next lookup that touches it and eagerly by the eviction scan
+    (re-admission refreshes the clock).  ``ttl=0`` means "expire on the
+    next access after storage" — a clock-scale-free idiom the
+    cross-environment tests rely on.  ``pinned`` entries are never
+    evicted and never expire (operator-protected residency).
     """
 
     key: str
@@ -83,6 +119,8 @@ class StoredPrefix:
     parent: Optional[str] = None
     manifest: Optional[KVManifest] = None
     token_ids: Optional[np.ndarray] = None
+    ttl: Optional[float] = None
+    pinned: bool = False
 
     @property
     def stored_bytes(self) -> int:
@@ -93,15 +131,17 @@ class StoredPrefix:
     def from_manifest(manifest: KVManifest, *,
                       raw_kv_bytes: int = 0,
                       parent: Optional[str] = None,
-                      token_ids: Optional[np.ndarray] = None
-                      ) -> "StoredPrefix":
+                      token_ids: Optional[np.ndarray] = None,
+                      ttl: Optional[float] = None,
+                      pinned: bool = False) -> "StoredPrefix":
         by_res: Dict[str, int] = {}
         for (_, res), blob in manifest.blobs.items():
             by_res[res] = by_res.get(res, 0) + len(blob)
         return StoredPrefix(key=manifest.prefix, n_tokens=manifest.n_tokens,
                             bytes_by_resolution=by_res,
                             raw_kv_bytes=raw_kv_bytes, parent=parent,
-                            manifest=manifest, token_ids=token_ids)
+                            manifest=manifest, token_ids=token_ids,
+                            ttl=ttl, pinned=pinned)
 
     def __repr__(self) -> str:
         mb = self.stored_bytes / 1e6
@@ -113,7 +153,9 @@ class StoredPrefix:
 def synthetic_stored_prefix(key: str, n_tokens: int, *,
                             raw_bytes_per_token: float,
                             ratios: Dict[str, float],
-                            parent: Optional[str] = None) -> "StoredPrefix":
+                            parent: Optional[str] = None,
+                            ttl: Optional[float] = None,
+                            pinned: bool = False) -> "StoredPrefix":
     """Manifest-less entry for the simulator: encoded sizes are derived
     from the raw KV footprint and per-resolution compression ratios, the
     same model `ServingSimulator._chunk_bytes` uses for wire sizes."""
@@ -121,7 +163,7 @@ def synthetic_stored_prefix(key: str, n_tokens: int, *,
     by_res = {res: int(raw / ratio) for res, ratio in ratios.items()}
     return StoredPrefix(key=key, n_tokens=n_tokens,
                         bytes_by_resolution=by_res, raw_kv_bytes=raw,
-                        parent=parent)
+                        parent=parent, ttl=ttl, pinned=pinned)
 
 
 # ---------------------------------------------------------------------------
@@ -144,8 +186,10 @@ class NodeStats:
     hits: int = 0
     evictions: int = 0
     admissions: int = 0
-    rejections: int = 0  # entry alone exceeds capacity
+    rejections: int = 0  # entry alone exceeds capacity / pinned-full node
     bytes_served: int = 0  # encoded bytes of served (full-hit) lookups
+    expirations: int = 0  # TTL-expired entries dropped (lazy or eager)
+    failures: int = 0  # times this node failed (residents lost)
 
 
 class StorageNode:
@@ -186,22 +230,72 @@ class StorageNode:
         self.used_bytes = 0
         self.bytes_by_resolution: Dict[str, int] = {}
         self.stats = NodeStats()
+        self.failed = False
         self._seq = 0
 
     def __repr__(self) -> str:
         cap = ("unbounded" if self.capacity_bytes is None else
                f"{self.used_bytes / GB:.2f}/{self.capacity_bytes / GB:.2f} GB")
+        state = ", FAILED" if self.failed else ""
         return (f"StorageNode({self.node_id}, {cap}, policy={self.policy}, "
-                f"{len(self.residents)} prefixes)")
+                f"{len(self.residents)} prefixes{state})")
+
+    # -- failure ------------------------------------------------------------
+    @property
+    def alive(self) -> bool:
+        return not self.failed
+
+    def fail(self) -> List[str]:
+        """Take this node down: every resident prefix is lost (residency
+        is volatile; the cluster catalog is the durable copy).  Returns
+        the lost keys in admission order so the cluster can plan heals
+        deterministically."""
+        lost = list(self.residents)
+        self.residents.clear()
+        self.used_bytes = 0
+        self.bytes_by_resolution = {}
+        self.failed = True
+        self.stats.failures += 1
+        return lost
+
+    def recover(self) -> None:
+        """Bring the node back, empty: it rejoins the ring and refills
+        organically (placement, heals, write-on-miss)."""
+        self.failed = False
+
+    # -- TTL ----------------------------------------------------------------
+    def is_expired(self, key: str, now: float) -> bool:
+        r = self.residents.get(key)
+        if r is None or r.entry.pinned or r.entry.ttl is None:
+            return False
+        return now - r.stored_at > r.entry.ttl
+
+    def expire_key(self, key: str) -> None:
+        self._remove(key)
+        self.stats.expirations += 1
+
+    def sweep_expired(self, now: float) -> List[str]:
+        """Eager TTL scan (runs before any eviction decision): drop every
+        expired entry so a stale copy never wins residency over a live
+        admission.  Returns the dropped keys in admission order."""
+        stale = [k for k, r in self.residents.items()
+                 if self.is_expired(k, now)]
+        for k in stale:
+            self.expire_key(k)
+        return stale
 
     # -- residency ----------------------------------------------------------
     def contains(self, key: str) -> bool:
         return key in self.residents
 
     def get(self, key: str, now: float) -> Optional[StoredPrefix]:
-        """Serve a lookup: touches recency/frequency accounting."""
+        """Serve a lookup: touches recency/frequency accounting.  A
+        TTL-expired entry is dropped lazily here and misses."""
         r = self.residents.get(key)
         if r is None:
+            return None
+        if self.is_expired(key, now):
+            self.expire_key(key)
             return None
         r.last_used = now
         r.hits += 1
@@ -214,18 +308,30 @@ class StorageNode:
         """Admit ``entry``, evicting by policy until it fits.
 
         Returns ``(admitted, evicted_keys)``.  An entry larger than the
-        whole node is rejected (never admitted by flushing everything).
-        Re-admitting a resident key replaces the stored artifact in
-        place — byte accounting follows the new version, hit history is
-        kept (it is the same prefix).
+        whole node is rejected (never admitted by flushing everything);
+        so is one that cannot fit beside the node's *pinned* residents
+        (pins are never evicted to make room).  Expired entries are
+        swept eagerly before any victim is chosen.  Re-admitting a
+        resident key replaces the stored artifact in place — byte
+        accounting follows the new version, hit history is kept (it is
+        the same prefix) — and refreshes its TTL clock.
         """
+        assert self.alive, f"put() on failed node {self.node_id}"
+        self.sweep_expired(now)
         size = entry.stored_bytes
-        if self.capacity_bytes is not None and size > self.capacity_bytes:
-            self.stats.rejections += 1
-            return False, []
         old = self.residents.get(entry.key)
         if old is not None:
             self._remove(entry.key)
+        if self.capacity_bytes is not None:
+            pinned_bytes = sum(r.entry.stored_bytes
+                               for r in self.residents.values()
+                               if r.entry.pinned)
+            if size > self.capacity_bytes - pinned_bytes:
+                if old is not None:  # keep the previous version resident
+                    self.residents[entry.key] = old
+                    self._account(old.entry, +1)
+                self.stats.rejections += 1
+                return False, []
         evicted: List[str] = []
         while (self.capacity_bytes is not None
                and self.used_bytes + size > self.capacity_bytes):
@@ -241,18 +347,19 @@ class StorageNode:
         self.residents[entry.key] = _Resident(entry, stored_at=now,
                                               last_used=now, seq=seq,
                                               hits=hits)
-        self.used_bytes += size
+        self._account(entry, +1)
+        return True, evicted
+
+    def _account(self, entry: StoredPrefix, sign: int) -> None:
+        self.used_bytes += sign * entry.stored_bytes
         for res, b in entry.bytes_by_resolution.items():
             self.bytes_by_resolution[res] = \
-                self.bytes_by_resolution.get(res, 0) + b
-        return True, evicted
+                self.bytes_by_resolution.get(res, 0) + sign * b
 
     def _remove(self, key: str) -> None:
         """Drop residency + byte accounting (no eviction stat)."""
         r = self.residents.pop(key)
-        self.used_bytes -= r.entry.stored_bytes
-        for res, b in r.entry.bytes_by_resolution.items():
-            self.bytes_by_resolution[res] -= b
+        self._account(r.entry, -1)
 
     def _drop(self, key: str) -> None:
         self._remove(key)
@@ -261,11 +368,13 @@ class StorageNode:
     def _pick_victim(self) -> str:
         """Deterministic victim selection: policy score, then LRU order,
         then admission order (``seq``) so equal entries break ties the
-        same way in every environment."""
+        same way in every environment.  Pinned entries are never
+        candidates (``put`` rejects up front when pins alone leave no
+        room, so a victim always exists here)."""
         def lru_key(r: _Resident):
             return (r.last_used, r.seq)
 
-        rs = self.residents.values()
+        rs = [r for r in self.residents.values() if not r.entry.pinned]
         if self.policy == "lru":
             victim = min(rs, key=lru_key)
         elif self.policy == "lfu":
@@ -296,7 +405,10 @@ class StorageHit:
     all), ``"partial"`` (only an *ancestor* is resident: fetch
     ``entry`` and recompute the ``requested_tokens - covered_tokens``
     tail), or ``"miss"`` (recompute everything; ``entry``/``node`` are
-    None).
+    None).  On a miss of a *cataloged* prefix, ``missed_key`` names it
+    so the environment can call
+    :meth:`StorageCluster.notify_recompute_done` once the fallback
+    prefill finishes (delayed write-on-miss).
     """
 
     kind: str  # "full" | "partial" | "miss"
@@ -304,6 +416,7 @@ class StorageHit:
     covered_tokens: int = 0
     entry: Optional[StoredPrefix] = None
     node: Optional[StorageNode] = None
+    missed_key: Optional[str] = None
 
 
 class StorageCluster:
@@ -324,21 +437,55 @@ class StorageCluster:
                  prefixes stop queueing behind each other.
 
     The **catalog** is the durable origin (donor-side artifact
-    registry): it survives node evictions, so a miss re-admits the
-    prefix from the catalog after recompute (pull-through semantics,
-    ``admit``).  Only node *residency* is capacity-bounded.
+    registry): it survives node evictions *and failures*, so a miss
+    re-admits the prefix after the recompute finishes (pull-through
+    semantics; see :meth:`notify_recompute_done`) and heals re-seed
+    from it when no replica survives.  Only node *residency* is
+    capacity-bounded.
+
+    Fault tolerance
+    ---------------
+    ``replication`` is the target copy count at registration (and heal)
+    time: an entry is placed on the first ``replication`` distinct
+    alive ring nodes.  :meth:`fail_node` drops a node from the ring
+    (its keys re-route to their successors), loses its residents, and
+    enqueues re-replication tasks; ``heal="sync"`` completes them
+    immediately (clock-free — replay tests), ``heal="link"`` streams
+    each heal over the source node's own `SharedLink` at
+    ``heal_weight`` so heal traffic contends with live fetches (the
+    environments wire the event queue via :meth:`bind`).
+
+    Admission control
+    -----------------
+    ``admission="always"`` stores everything (legacy).
+    ``"second_hit"`` stores a prefix only once it has been *asked for*
+    ``admission_min_asks`` times (one-shot prefixes never earn bytes).
+    ``"cost"`` stores only when the projected
+    bytes-saved-per-byte-stored score ``asks * raw_kv_bytes /
+    stored_bytes`` reaches ``admission_min_score`` (default 1.0 —
+    break-even: the store must expect to save at least the bytes it
+    spends; a score of 0 would admit everything).  Heals bypass
+    admission (they restore residency the controller already granted).
 
     Every decision is appended to :attr:`events` as ``(kind, key,
     node_id)`` tuples — ``admit``/``evict``/``hit``/``partial``/
-    ``miss``/``replicate``/``reject`` — deterministically for a given
-    access sequence.
+    ``miss``/``replicate``/``reject``/``fail``/``heal``/``recover``/
+    ``expire`` — deterministically for a given access sequence and
+    churn schedule.
     """
 
     def __init__(self, nodes: Sequence[StorageNode], *,
                  placement: str = "hash", replicate_threshold: int = 3,
-                 vnodes: int = 64, write_on_miss: bool = True):
+                 vnodes: int = 64, write_on_miss: bool = True,
+                 replication: int = 1, heal: str = "sync",
+                 heal_weight: float = HEAL_WEIGHT,
+                 admission: str = "always", admission_min_asks: int = 2,
+                 admission_min_score: float = 1.0):
         assert placement in ("hash", "popular"), placement
+        assert heal in ("sync", "link", "manual"), heal
+        assert admission in ("always", "second_hit", "cost"), admission
         assert len(nodes) > 0
+        assert 1 <= replication <= len(nodes), replication
         assert len({n.node_id for n in nodes}) == len(nodes), \
             "duplicate node ids"
         self.nodes = list(nodes)
@@ -346,13 +493,29 @@ class StorageCluster:
         self.placement = placement
         self.replicate_threshold = replicate_threshold
         self.write_on_miss = write_on_miss
+        self.replication = replication
+        self.heal = heal
+        self.heal_weight = heal_weight
+        self.admission = admission
+        self.admission_min_asks = admission_min_asks
+        self.admission_min_score = admission_min_score
         self.catalog: Dict[str, StoredPrefix] = {}
         self.hits_by_key: Dict[str, int] = {}
+        self.asks_by_key: Dict[str, int] = {}  # lookups incl. misses
         self.events: List[Tuple[str, str, str]] = []
         self.lookups = 0
         self.full_hits = 0
         self.partial_hits = 0
         self.misses = 0
+        self.heals_completed = 0
+        # heal="manual": tasks wait here for pump_heal() (wall-clock
+        # engines have no virtual event queue to schedule them on)
+        self.heal_queue: List[Tuple[StoredPrefix, Optional[str], str]] = []
+        # delayed write-on-miss: keys whose recompute is outstanding
+        self._pending_recompute: Set[str] = set()
+        # external event-queue hook (heal="link"): push(t, fn)
+        self._push = None
+        self._heal_flow = 0  # negative flow ids, distinct from rids
         self._ring: List[Tuple[int, str]] = []
         for n in self.nodes:
             for v in range(vnodes):
@@ -372,7 +535,9 @@ class StorageCluster:
                               "big")
 
     def _ring_nodes(self, key: str) -> List[StorageNode]:
-        """Distinct nodes in ring order starting at ``key``'s successor."""
+        """Distinct **alive** nodes in ring order starting at ``key``'s
+        successor — a failed node simply vanishes from every key's
+        successor list, which is the whole re-route story."""
         p = self._point(key)
         i = 0
         while i < len(self._ring) and self._ring[i][0] < p:
@@ -384,20 +549,30 @@ class StorageCluster:
                 seen.append(nid)
             if len(seen) == len(self.nodes):
                 break
-        return [self.by_id[nid] for nid in seen]
+        return [self.by_id[nid] for nid in seen if self.by_id[nid].alive]
 
     def primary_node(self, key: str) -> StorageNode:
-        return self._ring_nodes(key)[0]
+        ring = self._ring_nodes(key)
+        assert ring, "every storage node has failed"
+        return ring[0]
+
+    def alive_nodes(self) -> List[StorageNode]:
+        return [n for n in self.nodes if n.alive]
 
     # -- registration -------------------------------------------------------
     def register(self, entry: StoredPrefix, now: float = 0.0) -> None:
-        """Catalog ``entry`` and place it on its primary ring node."""
+        """Catalog ``entry`` and — admission permitting — place it on
+        the first ``replication`` alive ring nodes."""
         self.catalog[entry.key] = entry
         self.hits_by_key.setdefault(entry.key, 0)
-        self._place(entry, self.primary_node(entry.key), now)
+        if not self._admit_ok(entry):
+            self.events.append(("reject", entry.key, ""))
+            return
+        self._place_replicas(entry, now, skip_resident=False)
 
     def register_prefix(self, token_ids: np.ndarray, kv_k: np.ndarray,
                         kv_v: np.ndarray, *, now: float = 0.0,
+                        ttl: Optional[float] = None, pinned: bool = False,
                         **kw) -> StoredPrefix:
         """Encode real KV into a manifest (like the legacy `KVStore`),
         auto-detect the longest registered ancestor from ``token_ids``,
@@ -408,25 +583,71 @@ class StorageCluster:
         parent = self._longest_cataloged(token_ids, below=len(token_ids))
         entry = StoredPrefix.from_manifest(
             man, raw_kv_bytes=int(kv_k.nbytes + kv_v.nbytes),
-            parent=parent.key if parent else None, token_ids=token_ids)
+            parent=parent.key if parent else None, token_ids=token_ids,
+            ttl=ttl, pinned=pinned)
         self.register(entry, now)
         return entry
 
+    def _place_replicas(self, entry: StoredPrefix, now: float, *,
+                        skip_resident: bool) -> bool:
+        """Place ``entry`` on its first ``replication`` alive ring
+        nodes.  ``skip_resident=True`` leaves existing copies (and
+        their TTL clocks) untouched — the write-on-miss path;
+        ``False`` replaces them in place, refreshing the TTL — the
+        register/operator-admit semantics."""
+        ok = False
+        for node in self._ring_nodes(entry.key)[:self.replication]:
+            if skip_resident and node.contains(entry.key):
+                continue
+            ok |= self._place(entry, node, now)
+        return ok
+
     def _place(self, entry: StoredPrefix, node: StorageNode,
-               now: float) -> bool:
+               now: float, *, kind: str = "admit") -> bool:
+        # eager TTL at the eviction scan, logged here; put() sweeps
+        # again internally (node-level contract for direct users like
+        # KVStore) but finds nothing — same `now`
+        for k in node.sweep_expired(now):
+            self.events.append(("expire", k, node.node_id))
         ok, evicted = node.put(entry, now)
         for k in evicted:
             self.events.append(("evict", k, node.node_id))
         if ok:
-            self.events.append(("admit", entry.key, node.node_id))
+            self.events.append((kind, entry.key, node.node_id))
         else:
             self.events.append(("reject", entry.key, node.node_id))
         return ok
 
+    # -- admission control ---------------------------------------------------
+    def _admit_ok(self, entry: StoredPrefix) -> bool:
+        """Should this entry be granted node residency at all?"""
+        if self.admission == "always":
+            return True
+        asks = self.asks_by_key.get(entry.key, 0)
+        if self.admission == "second_hit":
+            return asks >= self.admission_min_asks
+        # documented formula, no floor: an entry whose encoding saves
+        # nothing (raw <= stored, or raw unknown) scores accordingly low
+        # — those are exactly the writes this gate exists to filter
+        return asks * entry.raw_kv_bytes / max(entry.stored_bytes, 1) \
+            >= self.admission_min_score
+
     # -- lookup -------------------------------------------------------------
-    def _resident_nodes(self, key: str) -> List[StorageNode]:
-        """Nodes holding ``key``, in deterministic ring order."""
-        return [n for n in self._ring_nodes(key) if n.contains(key)]
+    def _resident_nodes(self, key: str,
+                        now: Optional[float] = None) -> List[StorageNode]:
+        """Alive nodes holding ``key``, in deterministic ring order.
+        With ``now``, TTL-expired copies are dropped lazily here (and
+        logged) before they can serve the lookup."""
+        out: List[StorageNode] = []
+        for n in self._ring_nodes(key):
+            if not n.contains(key):
+                continue
+            if now is not None and n.is_expired(key, now):
+                n.expire_key(key)
+                self.events.append(("expire", key, n.node_id))
+                continue
+            out.append(n)
+        return out
 
     def _pick_replica(self, key: str,
                       nodes: List[StorageNode]) -> StorageNode:
@@ -471,17 +692,20 @@ class StorageCluster:
     def lookup(self, key: str, now: float,
                requested_tokens: Optional[int] = None) -> StorageHit:
         """Resolve a fetch for prefix ``key``: full hit if resident,
-        partial hit on the nearest resident ancestor, else miss (and —
-        with ``write_on_miss`` — re-admission from the catalog, modeling
-        the donor re-uploading after the recompute)."""
+        partial hit on the nearest resident ancestor, else miss.  With
+        ``write_on_miss``, a missed *cataloged* prefix becomes a pending
+        write that :meth:`notify_recompute_done` resolves once the
+        fallback prefill actually finishes — the donor cannot re-upload
+        KV that does not exist yet."""
         self.lookups += 1
+        self.asks_by_key[key] = self.asks_by_key.get(key, 0) + 1
         want = self.catalog.get(key)
         requested = (requested_tokens if requested_tokens is not None
                      else (want.n_tokens if want else 0))
         candidates = [want] if want else []
         candidates += self._ancestor_chain(key)
         for cand in candidates:
-            nodes = self._resident_nodes(cand.key)
+            nodes = self._resident_nodes(cand.key, now)
             if not nodes:
                 continue
             node = self._pick_replica(cand.key, nodes)
@@ -502,8 +726,26 @@ class StorageCluster:
         self.misses += 1
         self.events.append(("miss", key, ""))
         if self.write_on_miss and want is not None:
-            self._place(want, self.primary_node(key), now)
-        return StorageHit(kind="miss", requested_tokens=requested)
+            self._pending_recompute.add(key)
+        return StorageHit(kind="miss", requested_tokens=requested,
+                          missed_key=want.key if want else None)
+
+    def notify_recompute_done(self, key: str, now: float) -> None:
+        """The fallback full prefill for a missed prefix completed: the
+        KV exists again, so the delayed write-on-miss can re-admit it
+        (admission control permitting).  Called by both environments
+        when a ``storage_hit == "miss"`` request reaches its first
+        token; a no-op for keys with no pending write."""
+        if key not in self._pending_recompute:
+            return
+        self._pending_recompute.discard(key)
+        entry = self.catalog.get(key)
+        if entry is None:
+            return
+        if not self._admit_ok(entry):
+            self.events.append(("reject", key, ""))
+            return
+        self._place_replicas(entry, now, skip_resident=True)
 
     def lookup_tokens(self, token_ids: np.ndarray,
                       now: float) -> StorageHit:
@@ -514,22 +756,26 @@ class StorageCluster:
         best = self._longest_cataloged(token_ids,
                                        below=len(token_ids) + 1)
         if best is None:
+            key = prefix_key(token_ids)
             self.lookups += 1
+            self.asks_by_key[key] = self.asks_by_key.get(key, 0) + 1
             self.misses += 1
-            self.events.append(("miss", prefix_key(token_ids), ""))
+            self.events.append(("miss", key, ""))
             return StorageHit(kind="miss",
                               requested_tokens=len(token_ids))
         return self.lookup(best.key, now,
                            requested_tokens=len(token_ids))
 
     def admit(self, key: str, now: float) -> bool:
-        """Re-admit a cataloged prefix onto its primary node (explicit
-        pull-through; :meth:`lookup` already does this on miss when
-        ``write_on_miss`` is set)."""
+        """Explicitly (re-)admit a cataloged prefix onto its first
+        ``replication`` alive ring nodes — the operator override that
+        bypasses admission control (misses go through the delayed
+        :meth:`notify_recompute_done` path instead).  Existing copies
+        are replaced in place, refreshing their TTL clocks."""
         entry = self.catalog.get(key)
         if entry is None:
             return False
-        return self._place(entry, self.primary_node(key), now)
+        return self._place_replicas(entry, now, skip_resident=False)
 
     def _maybe_replicate(self, entry: StoredPrefix, now: float) -> None:
         if self.placement != "popular":
@@ -542,6 +788,109 @@ class StorageCluster:
                     self.events.append(("replicate", entry.key,
                                         node.node_id))
                 return  # one replica per threshold crossing
+
+    # -- node failure + ring heal -------------------------------------------
+    def bind(self, push) -> None:
+        """Wire the environment's event queue (``push(t, fn)`` — the
+        fetch controller's, via `FetchController.push_event`) so
+        ``heal="link"`` transfers can schedule their completions on the
+        shared virtual clock.  Also binds every node link, so heal flows
+        can join links no fetch has touched yet."""
+        self._push = push
+        for n in self.nodes:
+            if n.link is not None:
+                n.link.bind(push)
+
+    def fail_node(self, node_id: str, now: float) -> List[str]:
+        """Kill a node: its residents are lost, its keys re-route to
+        their ring successors, and a re-replication queue restores the
+        replication factor of every lost key — from a surviving replica
+        when one exists, else from the durable catalog.  Returns the
+        lost keys.  Heal transfers either complete immediately
+        (``heal="sync"``) or stream over the source node's link at
+        ``heal_weight`` (``heal="link"``), contending with live
+        fetches."""
+        node = self.by_id[node_id]
+        assert node.alive, f"{node_id} already failed"
+        lost = node.fail()
+        self.events.append(("fail", "", node_id))
+        assert self.alive_nodes(), "every storage node has failed"
+        for key in lost:
+            entry = self.catalog.get(key)
+            if entry is None:
+                continue
+            # pass `now` so TTL-expired copies neither count toward the
+            # replication factor nor get picked as the heal source
+            survivors = self._resident_nodes(key, now)
+            need = self.replication - len(survivors)
+            targets = [n for n in self._ring_nodes(key)
+                       if not n.contains(key)][:max(need, 0)]
+            source = survivors[0] if survivors else None
+            for target in targets:
+                self._start_heal(entry, source, target, now)
+        return lost
+
+    def recover_node(self, node_id: str, now: float) -> None:
+        """Bring a failed node back (empty): it rejoins the ring and
+        repopulates organically via placement, replication, and
+        write-on-miss."""
+        node = self.by_id[node_id]
+        assert not node.alive, f"{node_id} is not failed"
+        node.recover()
+        self.events.append(("recover", "", node_id))
+
+    def _start_heal(self, entry: StoredPrefix,
+                    source: Optional[StorageNode],
+                    target: StorageNode, now: float) -> None:
+        """One re-replication transfer.  The wire path is the source
+        node's own link (the durable catalog re-seeds over the target's
+        link — the donor uploads into the target); a heal flow joins at
+        ``heal_weight`` so live fetches keep link priority.  Modes:
+        ``sync`` completes here, ``manual`` queues for
+        :meth:`pump_heal` (wall-clock engines), ``link`` schedules the
+        completion on the bound event queue."""
+        if self.heal == "manual":
+            self.heal_queue.append(
+                (entry, source.node_id if source else None,
+                 target.node_id))
+            return
+        link = source.link if source is not None else target.link
+        if self.heal == "sync" or link is None:
+            self._finish_heal(entry, target, now)
+            return
+        assert self._push is not None, \
+            "heal='link' needs bind() — pass the cluster to a " \
+            "simulator/virtual-clock engine, or use heal='sync'/'manual'"
+        self._heal_flow -= 1
+        flow = self._heal_flow  # negative: never collides with a rid
+        link.open_flow(flow, weight=self.heal_weight)
+
+        def done(t: float, entry=entry, target=target, link=link,
+                 flow=flow) -> None:
+            link.close_flow(flow)
+            self._finish_heal(entry, target, t)
+
+        link.submit(flow, entry.stored_bytes, now, done)
+
+    def pump_heal(self, now: float) -> int:
+        """Complete every queued ``heal="manual"`` task (in enqueue
+        order); returns how many landed.  The operator's knob for
+        staging recovery in wall-clock environments and tests."""
+        tasks, self.heal_queue = self.heal_queue, []
+        n = 0
+        for entry, _, target_id in tasks:
+            target = self.by_id[target_id]
+            before = self.heals_completed
+            self._finish_heal(entry, target, now)
+            n += self.heals_completed - before
+        return n
+
+    def _finish_heal(self, entry: StoredPrefix, target: StorageNode,
+                     now: float) -> None:
+        if not target.alive or target.contains(entry.key):
+            return  # target churned away / copy arrived by another path
+        if self._place(entry, target, now, kind="heal"):
+            self.heals_completed += 1  # rejected heals are not completions
 
     # -- stats --------------------------------------------------------------
     def hit_rate(self) -> float:

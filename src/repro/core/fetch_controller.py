@@ -168,6 +168,15 @@ class FetchController:
         self._eid += 1
         heapq.heappush(self._events, (t, self._eid, fn))
 
+    def push_event(self, t: float, fn: Callable[[float], None]) -> None:
+        """Public event-queue handle for external producers sharing this
+        controller's virtual clock — the storage tier binds it
+        (`StorageCluster.bind`) so ``heal="link"`` re-replication
+        transfers complete through the same ``pump()`` the fetch
+        pipeline runs on, and heal flows contend with live fetches on
+        the nodes' `SharedLink`\\ s."""
+        self._push(t, fn)
+
     def pump(self, until: float) -> None:
         """Process every pipeline event with timestamp <= ``until``."""
         while self._events and self._events[0][0] <= until:

@@ -48,6 +48,10 @@ class Request:
     storage_hit: Optional[str] = None
     storage_node: Optional[str] = None
     requested_reuse_tokens: Optional[int] = None
+    # cataloged key that missed (delayed write-on-miss): the environment
+    # calls StorageCluster.notify_recompute_done(storage_miss_key) when
+    # this request's fallback prefill reaches its first token.
+    storage_miss_key: Optional[str] = None
     # fetch progress
     fetch_dispatched: bool = False  # scheduler handed it to the controller
     fetch_started: Optional[float] = None
@@ -115,7 +119,13 @@ class FetchingAwareScheduler:
         """Storage-tier miss: nothing to fetch — the request falls back
         to a full prefill.  It re-enters admission immediately (there is
         no fetch to wait for); under ``fetch_agnostic`` it simply stops
-        blocking the queue head since ``needs_fetch`` turns False."""
+        blocking the queue head since ``needs_fetch`` turns False.
+
+        Resolution of the miss is the *delayed write-on-miss* hook: the
+        environment watches for this request's first token and then
+        calls ``StorageCluster.notify_recompute_done`` with
+        ``req.storage_miss_key`` — the recomputed KV exists only from
+        that moment, so the storage tier must not re-admit earlier."""
         req.requested_reuse_tokens = req.reuse_tokens
         req.reuse_tokens = 0
         req.storage_hit = "miss"

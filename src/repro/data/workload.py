@@ -1,8 +1,9 @@
 """Workload generation: Poisson request traces with long-context prompts
 and a reuse threshold (paper §5.2: rate 0.2 req/s, >=40K-token prompts
-reuse remote KV), shared-prefix corpora for the live engine, and the
+reuse remote KV), shared-prefix corpora for the live engine, the
 Zipf-over-a-prefix-trie popularity workload the storage-tier benchmarks
-drive (docs/storage_tier.md)."""
+drive, and seeded node-churn schedules for the failover scenarios
+(docs/storage_tier.md)."""
 from __future__ import annotations
 
 import dataclasses
@@ -93,6 +94,38 @@ def zipf_prefix_trace(rng: np.random.Generator,
                            reuse_tokens=spec.n_tokens, prefix=spec.key,
                            max_new_tokens=max_new_tokens))
     return out
+
+
+def churn_schedule(rng: np.random.Generator,
+                   node_ids: Sequence[str], *,
+                   n_failures: int = 1, t_start: float = 100.0,
+                   gap: float = 400.0, downtime: Optional[float] = 200.0
+                   ) -> tuple:
+    """Seeded storage-node churn: ``n_failures`` fail events starting at
+    ``t_start`` spaced ``gap`` seconds apart, each node drawn uniformly
+    (never failing a node that is still down).  Returns ``(fail_at,
+    recover_at)`` lists shaped for ``ServingSimulator(fail_at=...,
+    recover_at=...)``; ``downtime=None`` means nodes never recover.
+    Deterministic for a given rng seed, so simulator and live engine
+    can replay the identical churn trace."""
+    fail_at: List[tuple] = []
+    recover_at: List[tuple] = []
+    down_until: dict = {}
+    t = t_start
+    for _ in range(n_failures):
+        up = [n for n in node_ids if down_until.get(n, -1.0) < t]
+        if len(up) <= 1:
+            break  # never fail the last alive node (the cluster —
+            # and StorageCluster.fail_node — require one survivor)
+        nid = up[int(rng.integers(len(up)))]
+        fail_at.append((t, nid))
+        if downtime is not None:
+            recover_at.append((t + downtime, nid))
+            down_until[nid] = t + downtime
+        else:
+            down_until[nid] = float("inf")
+        t += gap
+    return fail_at, recover_at
 
 
 def shared_prefix_tokens(rng: np.random.Generator, vocab: int,

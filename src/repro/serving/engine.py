@@ -30,7 +30,12 @@ The ``store`` may be a flat `KVStore` or a multi-node `StorageCluster`
 (docs/storage_tier.md): with a cluster, every fetch resolves through a
 longest-prefix-match over the prompt tokens — full hit, partial
 (ancestor) hit with tail recompute, or miss with full-prefill fallback —
-and transmits over the serving node's own link.
+and transmits over the serving node's own link.  The cluster is
+fault-tolerant: ``engine.fail_node(node_id)`` kills a node mid-serve
+(keys re-route to ring successors, heals restore replication), TTLs
+expire stale copies lazily at lookup, and the delayed write-on-miss
+re-admits a missed prefix only once its fallback prefill produced the
+first token (`notify_recompute_done`).
 """
 from __future__ import annotations
 
@@ -151,10 +156,29 @@ class LiveEngine:
                     layerwise_admission=(fetch_mode == "async"
                                          and policy == "kvfetcher")),
                 hooks=_EngineHooks(self))
+            if isinstance(store, StorageCluster):
+                # heal="link" re-replication transfers share the
+                # controller's virtual clock + the nodes' links
+                store.bind(self.ctrl.push_event)
 
     # -- time: virtual clock in modeled-network mode, else wall clock -------
     def now(self) -> float:
         return self._clock if self.virtual else time.monotonic()
+
+    # -- storage-node churn ---------------------------------------------------
+    def fail_node(self, node_id: str) -> None:
+        """Kill one storage node at the engine's current clock: its keys
+        re-route to ring successors and the cluster's heal queue
+        restores the replication factor (`docs/storage_tier.md`).
+        Subsequent lookups for prefixes it alone held miss and fall back
+        to full prefill until healed."""
+        assert isinstance(self.store, StorageCluster), \
+            "fail_node needs a multi-node StorageCluster store"
+        self.store.fail_node(node_id, self.now())
+
+    def recover_node(self, node_id: str) -> None:
+        assert isinstance(self.store, StorageCluster)
+        self.store.recover_node(node_id, self.now())
 
     # -- intake -------------------------------------------------------------
     def submit(self, tokens: np.ndarray, reuse_prefix: Optional[str] = None,
@@ -183,6 +207,7 @@ class LiveEngine:
             hit = self.store.lookup_tokens(tokens, self.now())
             req.storage_hit = hit.kind
             if hit.kind == "miss":
+                req.storage_miss_key = hit.missed_key
                 self.sched.notify_fetch_miss(req, self.now())
                 return
             req.storage_node = hit.node.node_id
@@ -267,6 +292,12 @@ class LiveEngine:
         req.tokens_out = 1
         req.t_first_token = self.now()
         req.token_times.append(req.t_first_token)
+        if (req.storage_hit == "miss" and req.storage_miss_key
+                and isinstance(self.store, StorageCluster)):
+            # delayed write-on-miss: only now does the recomputed KV
+            # exist for the donor to re-upload
+            self.store.notify_recompute_done(req.storage_miss_key,
+                                             req.t_first_token)
 
     def _await_layer(self, req: Request, layer: int) -> None:
         """Async mode: block (on the virtual clock) until ``layer``'s

@@ -1,0 +1,157 @@
+"""The CI perf-regression gate (ISSUE 4 satellites): benchmark-module
+selection must be exact (``--only ttft`` can never also match a future
+``bench_ttft_decode``), and tools/check_bench.py must go red exactly
+when a gated derived ratio regresses >tolerance against
+benchmarks/baselines.json."""
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+CSV_OK = """name,us_per_call,derived
+ttft.kvfetcher.bw2.ctx50k,123.0,0.000123
+ttft.live.speedup_async_vs_sync,0.0,1.60
+ttft.storage.speedup_cost_vs_lru,0.0,1.17
+# bench_ttft done in 1.0s
+"""
+
+
+def _baselines(tmp_path, rows, tolerance=0.25):
+    p = tmp_path / "baselines.json"
+    p.write_text(json.dumps({"tolerance": tolerance, "rows": rows}))
+    return p
+
+
+def _check_bench():
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import check_bench
+    finally:
+        sys.path.pop(0)
+    return check_bench
+
+
+# ---------------------------------------------------------------------------
+# benchmarks.run --only: exact-name selection
+# ---------------------------------------------------------------------------
+
+def test_only_matches_exact_module_name_not_substring():
+    from benchmarks.run import MODULES, selected
+    assert selected("ttft") == ["bench_ttft"]
+    assert selected("bench_ttft") == ["bench_ttft"]
+    # substring semantics would also catch a hypothetical
+    # bench_ttft_decode; exact semantics must not
+    assert "bench_ttft_decode" not in MODULES  # precondition
+    assert selected("ttf") == []  # no prefix/substring matching
+    assert selected("kernels") == ["bench_kernels"]
+    assert selected(None) == MODULES
+
+
+def test_only_unknown_name_exits_nonzero(capsys, monkeypatch):
+    import pytest
+
+    from benchmarks import run as bench_run
+    monkeypatch.setattr(sys, "argv", ["run", "--only", "ttft_decode"])
+    with pytest.raises(SystemExit) as e:
+        bench_run.main()
+    assert "matches no module" in str(e.value)
+
+
+def test_list_prints_module_names(capsys, monkeypatch):
+    from benchmarks import run as bench_run
+    monkeypatch.setattr(sys, "argv", ["run", "--list"])
+    bench_run.main()
+    out = capsys.readouterr().out.splitlines()
+    assert out == bench_run.MODULES
+
+
+# ---------------------------------------------------------------------------
+# tools/check_bench.py: the regression gate itself
+# ---------------------------------------------------------------------------
+
+def test_gate_passes_within_tolerance(tmp_path):
+    cb = _check_bench()
+    csv = tmp_path / "t.csv"
+    csv.write_text(CSV_OK)
+    base = _baselines(tmp_path, {
+        "ttft.live.speedup_async_vs_sync": 1.70,   # -6%: inside 25%
+        "ttft.storage.speedup_cost_vs_lru": 1.17,
+    })
+    assert cb.main([str(csv), "--baselines", str(base)]) == 0
+
+
+def test_gate_fails_on_over_25pct_regression(tmp_path, capsys):
+    cb = _check_bench()
+    csv = tmp_path / "t.csv"
+    csv.write_text(CSV_OK)
+    base = _baselines(tmp_path, {
+        "ttft.live.speedup_async_vs_sync": 2.20,   # 1.60 < 2.20*0.75
+        "ttft.storage.speedup_cost_vs_lru": 1.17,
+    })
+    assert cb.main([str(csv), "--baselines", str(base)]) == 1
+    assert "REGRESSED" in capsys.readouterr().out
+
+
+def test_gate_fails_when_baseline_row_vanishes_from_csv(tmp_path):
+    cb = _check_bench()
+    csv = tmp_path / "t.csv"
+    csv.write_text(CSV_OK)
+    base = _baselines(tmp_path, {"ttft.gone.speedup_x_vs_y": 2.0,
+                                 "ttft.live.speedup_async_vs_sync": 1.6,
+                                 "ttft.storage.speedup_cost_vs_lru": 1.1})
+    assert cb.main([str(csv), "--baselines", str(base)]) == 1
+
+
+def test_gate_fails_on_new_gated_row_without_baseline(tmp_path, capsys):
+    cb = _check_bench()
+    csv = tmp_path / "t.csv"
+    csv.write_text(CSV_OK + "ttft.newthing.speedup_a_vs_b,0.0,3.0\n")
+    base = _baselines(tmp_path, {
+        "ttft.live.speedup_async_vs_sync": 1.60,
+        "ttft.storage.speedup_cost_vs_lru": 1.17,
+    })
+    assert cb.main([str(csv), "--baselines", str(base)]) == 1
+    assert "--update" in capsys.readouterr().err
+
+
+def test_gate_fails_on_failed_module_row(tmp_path):
+    cb = _check_bench()
+    csv = tmp_path / "t.csv"
+    csv.write_text(CSV_OK + "bench_ttft.FAILED,0,0  # RuntimeError()\n")
+    base = _baselines(tmp_path, {
+        "ttft.live.speedup_async_vs_sync": 1.60,
+        "ttft.storage.speedup_cost_vs_lru": 1.17,
+    })
+    assert cb.main([str(csv), "--baselines", str(base)]) == 1
+
+
+def test_update_writes_gated_rows_only(tmp_path):
+    cb = _check_bench()
+    csv = tmp_path / "t.csv"
+    csv.write_text(CSV_OK)
+    base = tmp_path / "fresh.json"
+    assert cb.main([str(csv), "--baselines", str(base),
+                    "--update"]) == 0
+    data = json.loads(base.read_text())
+    assert set(data["rows"]) == {"ttft.live.speedup_async_vs_sync",
+                                 "ttft.storage.speedup_cost_vs_lru"}
+    assert data["tolerance"] == 0.25
+    # raw-seconds rows are machine-dependent and must not be gated
+    assert "ttft.kvfetcher.bw2.ctx50k" not in data["rows"]
+    # and the freshly-written baselines gate the same CSV green
+    assert cb.main([str(csv), "--baselines", str(base)]) == 0
+
+
+def test_committed_baselines_cover_current_bench_rows():
+    """The committed baselines file parses and its tolerance is the
+    documented 25%; row membership is checked end-to-end by the
+    bench-gate CI job (running the bench here would be minutes)."""
+    data = json.loads((ROOT / "benchmarks" /
+                       "baselines.json").read_text())
+    assert data["tolerance"] == 0.25
+    cb = _check_bench()
+    assert all(any(m in k for m in cb.GATE_MARKERS)
+               for k in data["rows"])
+    assert any("failover" in k for k in data["rows"]), \
+        "failover ratios must be gated"

@@ -33,6 +33,59 @@ def test_docs_exist_and_are_linked():
         (root / "docs" / "storage_tier.md").read_text()
 
 
+def test_checker_fails_on_broken_relative_link(tmp_path, monkeypatch):
+    """A doc pointing at a moved/deleted file must fail the docs job —
+    not just be skipped (ISSUE 4: only the happy path was asserted)."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "tools"))
+    try:
+        import check_docs
+        (tmp_path / "docs").mkdir()
+        (tmp_path / "README.md").write_text(
+            "see [the guide](docs/real.md)\n"
+            "```bash\npython -m pytest -q\n```\n")
+        (tmp_path / "docs" / "real.md").write_text(
+            "[gone](missing_file.md)\n")
+        monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+        assert check_docs.main() == 1
+        assert check_docs.check_links(tmp_path / "docs" / "real.md") == [
+            "docs/real.md: broken link -> missing_file.md"]
+    finally:
+        sys.path.pop(0)
+
+
+def test_checker_fails_on_command_that_exits_nonzero(tmp_path,
+                                                     monkeypatch):
+    """A documented command that errors out (e.g. a module that no
+    longer exists) must fail the docs job."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "tools"))
+    try:
+        import check_docs
+        (tmp_path / "README.md").write_text(
+            "```bash\npython -m repro.no_such_module_xyz --flag\n```\n")
+        monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+        assert check_docs.main() == 1
+        ok, detail = check_docs.check_command(
+            "python -m repro.no_such_module_xyz --flag")
+        assert not ok and detail
+    finally:
+        sys.path.pop(0)
+
+
+def test_checker_fails_on_unknown_command_shape(tmp_path, monkeypatch):
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "tools"))
+    try:
+        import check_docs
+        (tmp_path / "README.md").write_text(
+            "```bash\ncurl https://example.com | sh\n```\n")
+        monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+        assert check_docs.main() == 1
+    finally:
+        sys.path.pop(0)
+
+
 def test_checker_scans_docs_subdirectories(tmp_path, monkeypatch):
     """Docs added under docs/<subdir>/ must be scanned, not silently
     skipped (regression: the old glob was a flat docs/*.md)."""

@@ -165,16 +165,24 @@ def test_lookup_full_partial_miss_and_ancestor_chain():
     assert miss.kind == "miss" and miss.entry is None
 
 
-def test_write_on_miss_readmits_from_catalog():
+def test_write_on_miss_is_delayed_until_recompute_done():
+    """A miss must NOT re-admit at lookup time — the recomputed KV only
+    exists once the fallback prefill finishes (notify_recompute_done)."""
     c = _cluster(n_nodes=1, cap=25 * MB)
     c.register(_entry("a", size=10 * MB), 0.0)
     c.register(_entry("b", size=10 * MB), 1.0)
     c.register(_entry("c", size=10 * MB), 2.0)  # evicts a (lru)
     assert not c.nodes[0].contains("a")
     hit = c.lookup("a", 3.0)
-    assert hit.kind == "miss"
+    assert hit.kind == "miss" and hit.missed_key == "a"
+    assert not c.nodes[0].contains("a")  # not yet: recompute in flight
+    c.notify_recompute_done("a", 5.0)
     assert c.nodes[0].contains("a")  # pull-through re-admission
-    assert c.lookup("a", 4.0).kind == "full"
+    assert c.lookup("a", 6.0).kind == "full"
+    # idempotent: a second notify without a pending miss is a no-op
+    n_events = len(c.events)
+    c.notify_recompute_done("a", 7.0)
+    assert len(c.events) == n_events
 
 
 def test_popularity_replication_spreads_hot_prefixes():
@@ -245,6 +253,206 @@ def test_kvstore_facade_keeps_flat_api(synthetic_kv):
     assert store.get_chunk(man.prefix, ref.chunk_id, "240p") == \
         man.blobs[(ref.chunk_id, "240p")]
     assert store.stored_bytes() == sum(len(b) for b in man.blobs.values())
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: fail/recover, ring heal, TTL/pinning, admission (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def test_node_fail_loses_residents_and_recover_rejoins_empty():
+    n = StorageNode("n0", capacity_bytes=100 * MB)
+    n.put(_entry("a"), 0.0)
+    n.put(_entry("b"), 1.0)
+    lost = n.fail()
+    assert lost == ["a", "b"] and not n.alive
+    assert n.used_bytes == 0 and not n.residents
+    assert n.stats.failures == 1
+    assert "FAILED" in repr(n)
+    n.recover()
+    assert n.alive and not n.residents
+    ok, _ = n.put(_entry("c"), 2.0)
+    assert ok
+
+
+def test_failed_node_leaves_the_ring():
+    c = _cluster(cap=None)
+    keys = [f"k{i}" for i in range(40)]
+    n0_keys = [k for k in keys if c.primary_node(k).node_id == "n0"]
+    assert n0_keys
+    c.fail_node("n0", 0.0)
+    assert ("fail", "", "n0") in c.events
+    for k in n0_keys:  # keys re-route to their ring successors
+        assert c.primary_node(k).node_id != "n0"
+    c.recover_node("n0", 1.0)
+    assert ("recover", "", "n0") in c.events
+    assert c.primary_node(n0_keys[0]).node_id == "n0"
+
+
+def test_ring_heal_restores_replication_from_surviving_replica():
+    c = _cluster(cap=None, replication=2)
+    c.register(_entry("k"), 0.0)
+    holders = [n.node_id for n in c.nodes if n.contains("k")]
+    assert len(holders) == 2  # replication=2 at registration
+    c.fail_node(holders[0], 1.0)
+    # sync heal: a new second replica appears immediately, sourced from
+    # the survivor (the catalog is never needed while a replica lives)
+    now_holders = [n.node_id for n in c.nodes if n.contains("k")]
+    assert len(now_holders) == 2 and holders[0] not in now_holders
+    assert ("heal", "k", [h for h in now_holders
+                          if h != holders[1]][0]) in c.events
+    assert c.lookup("k", 2.0).kind == "full"
+    assert c.heals_completed == 1
+
+
+def test_ring_heal_reseeds_unreplicated_key_from_catalog():
+    c = _cluster(cap=None, replication=1)
+    c.register(_entry("k"), 0.0)
+    holder = next(n.node_id for n in c.nodes if n.contains("k"))
+    c.fail_node(holder, 1.0)
+    assert sum(1 for n in c.nodes if n.contains("k")) == 1
+    assert any(e[0] == "heal" and e[1] == "k" for e in c.events)
+    assert c.lookup("k", 2.0).kind == "full"
+
+
+def test_fail_node_does_not_count_expired_copies_as_survivors():
+    """A TTL-stale replica is not a heal source: failing one holder of
+    a fully-expired pair must re-seed from the catalog (and log the
+    expiry), not under-replicate against a ghost copy."""
+    c = _cluster(cap=None, replication=2)
+    c.register(StoredPrefix("k", 1000, {"240p": MB}, raw_kv_bytes=8 * MB,
+                            ttl=5.0), 0.0)
+    holders = [n.node_id for n in c.nodes if n.contains("k")]
+    assert len(holders) == 2
+    c.fail_node(holders[0], 100.0)  # both copies are long expired
+    assert any(e == ("expire", "k", holders[1]) for e in c.events)
+    live = [n.node_id for n in c.nodes if n.contains("k")]
+    assert len(live) == 2 and holders[0] not in live  # fully re-seeded
+    assert c.lookup("k", 101.0).kind == "full"
+
+
+def test_rejected_heal_is_not_counted_completed():
+    """A heal whose target cannot take the entry (pinned-full node)
+    logs a reject and must NOT bump heals_completed — the replication
+    factor was not restored."""
+    c = _cluster(n_nodes=2, cap=15 * MB, replication=1)
+    c.register(_entry("k"), 0.0)
+    holder = next(n for n in c.nodes if n.contains("k"))
+    other = next(n for n in c.nodes if n is not holder)
+    other.put(StoredPrefix("pin", 100, {"240p": 10 * MB}, pinned=True),
+              0.5)
+    c.fail_node(holder.node_id, 1.0)
+    assert c.heals_completed == 0
+    assert ("reject", "k", other.node_id) in c.events
+    assert not other.contains("k")
+
+
+def test_manual_heal_queues_until_pumped():
+    c = _cluster(cap=None, replication=1, heal="manual")
+    c.register(_entry("k"), 0.0)
+    holder = next(n.node_id for n in c.nodes if n.contains("k"))
+    c.fail_node(holder, 1.0)
+    assert not any(n.contains("k") for n in c.nodes)
+    assert c.lookup("k", 2.0).kind == "miss"  # down until pumped
+    assert c.pump_heal(3.0) == 1
+    assert c.lookup("k", 4.0).kind == "full"
+
+
+def test_ttl_expires_lazily_at_lookup():
+    c = _cluster(n_nodes=1, cap=None)
+    c.register(StoredPrefix("short", 1000, {"240p": MB}, ttl=10.0), 0.0)
+    assert c.lookup("short", 5.0).kind == "full"  # inside TTL
+    hit = c.lookup("short", 20.0)  # stale: dropped at this lookup
+    assert hit.kind == "miss"
+    assert ("expire", "short", "n0") in c.events
+    assert c.nodes[0].stats.expirations == 1
+
+
+def test_ttl_swept_eagerly_at_eviction_scan():
+    n = StorageNode("n0", capacity_bytes=30 * MB)
+    n.put(StoredPrefix("stale", 1000, {"240p": 20 * MB}, ttl=5.0), 0.0)
+    n.put(_entry("live"), 1.0)
+    # at t=10 "stale" is expired: the scan reclaims it instead of
+    # evicting the live entry
+    ok, evicted = n.put(_entry("new"), 10.0)
+    assert ok and evicted == []
+    assert not n.contains("stale") and n.contains("live")
+    assert n.stats.expirations == 1 and n.stats.evictions == 0
+
+
+def test_reput_refreshes_ttl_clock():
+    n = StorageNode("n0", capacity_bytes=None)
+    e = StoredPrefix("k", 1000, {"240p": MB}, ttl=10.0)
+    n.put(e, 0.0)
+    n.put(e, 8.0)  # re-admission restarts the clock
+    assert not n.is_expired("k", 15.0)
+    assert n.is_expired("k", 19.0)
+
+
+def test_pinned_survives_eviction_and_never_expires():
+    n = StorageNode("n0", capacity_bytes=30 * MB, policy="lru")
+    n.put(StoredPrefix("pin", 1000, {"240p": 10 * MB}, pinned=True,
+                       ttl=1.0), 0.0)
+    for i in range(4):  # scan pressure that flushes everything unpinned
+        n.put(_entry(f"scan{i}"), 100.0 + i)
+    assert n.contains("pin")  # neither evicted nor expired (ttl ignored)
+    assert not n.is_expired("pin", 1e9)
+
+
+def test_pinned_full_node_rejects_instead_of_unpinning():
+    n = StorageNode("n0", capacity_bytes=30 * MB)
+    n.put(StoredPrefix("p1", 1000, {"240p": 15 * MB}, pinned=True), 0.0)
+    n.put(StoredPrefix("p2", 1000, {"240p": 10 * MB}, pinned=True), 1.0)
+    ok, evicted = n.put(_entry("x"), 2.0)  # 10 MB cannot fit beside pins
+    assert not ok and evicted == []
+    assert n.stats.rejections == 1
+    assert n.contains("p1") and n.contains("p2")
+
+
+def test_admission_second_hit_defers_residency():
+    c = _cluster(n_nodes=1, cap=None, admission="second_hit",
+                 admission_min_asks=2)
+    c.register(_entry("a"), 0.0)
+    assert ("reject", "a", "") in c.events  # cataloged, not resident
+    assert not c.nodes[0].contains("a")
+    assert c.lookup("a", 1.0).kind == "miss"  # ask 1
+    c.notify_recompute_done("a", 2.0)
+    assert not c.nodes[0].contains("a")  # 1 ask < 2: still filtered
+    assert c.lookup("a", 3.0).kind == "miss"  # ask 2
+    c.notify_recompute_done("a", 4.0)
+    assert c.nodes[0].contains("a")  # earned residency
+    assert c.lookup("a", 5.0).kind == "full"
+
+
+def test_admission_cost_threshold_filters_low_value_entries():
+    c = _cluster(n_nodes=1, cap=None, admission="cost",
+                 admission_min_score=4.0)
+    # raw/stored = 8 -> one ask scores 8 >= 4; a no-compression entry
+    # (raw == stored) scores 1 per ask and needs 4 asks
+    c.register(_entry("dense"), 0.0)
+    cheap = StoredPrefix("cheap", 1000, {"240p": 10 * MB},
+                         raw_kv_bytes=10 * MB)
+    c.register(cheap, 0.0)
+    for t in range(2):
+        c.lookup("dense", 1.0 + t)
+        c.lookup("cheap", 1.5 + t)
+    c.notify_recompute_done("dense", 4.0)
+    c.notify_recompute_done("cheap", 4.0)
+    assert c.nodes[0].contains("dense")
+    assert not c.nodes[0].contains("cheap")
+
+
+def test_heal_bypasses_admission_control():
+    c = _cluster(cap=None, replication=1, admission="second_hit",
+                 admission_min_asks=2)
+    c.register(_entry("k"), 0.0)
+    for t in range(2):
+        c.lookup("k", 1.0 + t)
+    c.notify_recompute_done("k", 3.0)
+    holder = next(n.node_id for n in c.nodes if n.contains("k"))
+    c.fail_node(holder, 4.0)
+    # the heal restores residency even though asks reset nothing —
+    # admission gates *new* writes, not recovery of granted ones
+    assert any(n.contains("k") for n in c.nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -390,15 +598,129 @@ def test_sim_eviction_policies_diverge_and_are_deterministic():
     assert hits["cost"] > hits["lru"]
 
 
+def test_sim_scripted_failure_unreplicated_pays_full_prefill():
+    """fail_at= kills the only holder mid-trace: the next ask misses
+    (full-prefill TTFT), the link heal lands *after* that miss (heal
+    traffic is not teleportation), and a later ask hits again."""
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(2, 1, base_tokens=40_000)
+    cluster = _sim_cluster(cfg, specs, n_nodes=3, replication=1,
+                           heal="link")
+    victim = cluster.primary_node(specs[0].key).node_id
+    reqs = [
+        Request(rid=0, arrival=10.0, prompt_len=41_000,
+                reuse_tokens=40_000, prefix=specs[0].key),  # pre-fail
+        Request(rid=1, arrival=301.0, prompt_len=41_000,
+                reuse_tokens=40_000, prefix=specs[0].key),  # mid-heal
+        Request(rid=2, arrival=900.0, prompt_len=41_000,
+                reuse_tokens=40_000, prefix=specs[0].key),  # healed
+    ]
+    res, _ = _sim(cluster, reqs, fail_at=[(300.0, victim)])
+    assert [r.storage_hit for r in reqs] == ["full", "miss", "full"]
+    assert reqs[1].ttft > 2.0 * reqs[0].ttft  # miss pays the prefill
+    kinds = [e[0] for e in cluster.events]
+    assert "fail" in kinds and "heal" in kinds
+    # the heal completed over the wire, strictly after rid=1's miss
+    miss_i = cluster.events.index(("miss", specs[0].key, ""))
+    heal_i = next(i for i, e in enumerate(cluster.events)
+                  if e[0] == "heal" and e[1] == specs[0].key)
+    assert heal_i > miss_i
+    assert res.requests  # completed trace
+
+
+def test_sim_replicated_cluster_serves_through_failure():
+    """With replication=2 the surviving replica absorbs the failure:
+    the post-fail ask is still a full hit at near-identical TTFT."""
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(2, 1, base_tokens=40_000)
+    cluster = _sim_cluster(cfg, specs, n_nodes=3, replication=2,
+                           heal="link")
+    holders = [n.node_id for n in cluster.nodes
+               if n.contains(specs[0].key)]
+    assert len(holders) == 2
+    # rid=1 lands while the heal still streams over the survivor's link
+    # (contention, not failure, is its penalty); rid=2/3 land after
+    reqs = [Request(rid=i, arrival=t, prompt_len=41_000,
+                    reuse_tokens=40_000, prefix=specs[0].key)
+            for i, t in enumerate((10.0, 301.0, 450.0, 600.0))]
+    _sim(cluster, reqs, fail_at=[(300.0, holders[0])])
+    assert [r.storage_hit for r in reqs] == ["full"] * 4
+    assert all(r.storage_node != holders[0] for r in reqs[1:])
+    post = [r.ttft for r in reqs[1:]]
+    assert sum(post) / len(post) < 1.3 * reqs[0].ttft
+    # the mid-heal request pays heal contention; the healed ones do not
+    assert reqs[1].ttft > reqs[2].ttft
+    assert reqs[2].ttft < 1.1 * reqs[0].ttft
+
+
+def test_churn_schedule_is_seeded_and_replayable():
+    from repro.data.workload import churn_schedule
+    ids = ["n0", "n1", "n2"]
+    s1 = churn_schedule(np.random.default_rng(3), ids, n_failures=3,
+                        t_start=100.0, gap=400.0, downtime=200.0)
+    s2 = churn_schedule(np.random.default_rng(3), ids, n_failures=3,
+                        t_start=100.0, gap=400.0, downtime=200.0)
+    assert s1 == s2  # same seed -> same trace in every environment
+    fail_at, recover_at = s1
+    assert [t for t, _ in fail_at] == [100.0, 500.0, 900.0]
+    assert [t for t, _ in recover_at] == [300.0, 700.0, 1100.0]
+    assert all(nid in ids for _, nid in fail_at)
+    # downtime=None: failed nodes stay down, and the schedule never
+    # kills the last alive node (fail_node requires a survivor)
+    fails, recs = churn_schedule(np.random.default_rng(3), ["n0", "n1"],
+                                 n_failures=5, downtime=None)
+    assert recs == [] and len(fails) == 1
+
+
+def test_sim_churned_node_recovers_and_rejoins_the_ring():
+    """A full fail->recover cycle mid-trace: requests keep being served
+    (replica during the outage), and after recovery the ring routes the
+    key's primary back to the recovered node."""
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(1, 1, base_tokens=40_000)
+    cluster = _sim_cluster(cfg, specs, n_nodes=3, replication=2)
+    victim = cluster.primary_node(specs[0].key).node_id
+    reqs = [Request(rid=i, arrival=t, prompt_len=41_000,
+                    reuse_tokens=40_000, prefix=specs[0].key)
+            for i, t in enumerate((10.0, 350.0, 700.0))]
+    _sim(cluster, reqs, fail_at=[(300.0, victim)],
+         recover_at=[(600.0, victim)])
+    assert [r.storage_hit for r in reqs] == ["full"] * 3
+    kinds = [e[0] for e in cluster.events]
+    assert "fail" in kinds and "recover" in kinds
+    assert cluster.by_id[victim].alive
+    assert cluster.primary_node(specs[0].key).node_id == victim
+
+
+def test_sim_churn_scheduled_after_last_arrival_still_executes():
+    """fail/recover instants after the final request must still fire —
+    the post-run cluster state has to be honest."""
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(1, 1, base_tokens=40_000)
+    cluster = _sim_cluster(cfg, specs, n_nodes=3, replication=2)
+    victim = cluster.primary_node(specs[0].key).node_id
+    reqs = [Request(rid=0, arrival=10.0, prompt_len=41_000,
+                    reuse_tokens=40_000, prefix=specs[0].key)]
+    _sim(cluster, reqs, fail_at=[(500.0, victim)],
+         recover_at=[(600.0, victim)])
+    kinds = [e[0] for e in cluster.events]
+    assert "fail" in kinds and "recover" in kinds
+    assert cluster.by_id[victim].alive
+
+
 # ---------------------------------------------------------------------------
 # live engine integration (real model, real codec)
 # ---------------------------------------------------------------------------
 
 def _live_cluster(donor_kv, token_sets, *, cap=None, policy="lru",
-                  n_nodes=1):
+                  n_nodes=1, **cluster_kw):
     nodes = [StorageNode(f"n{i}", capacity_bytes=cap, policy=policy)
              for i in range(n_nodes)]
-    cluster = StorageCluster(nodes)
+    cluster = StorageCluster(nodes, **cluster_kw)
     for toks in token_sets:
         kv_k, kv_v = donor_kv(toks)
         cluster.register_prefix(toks, kv_k, kv_v, tokens_per_chunk=16,
@@ -449,6 +771,48 @@ def test_live_miss_falls_back_to_full_prefill(tiny_cfg, tiny_params,
     ref_req = ref.submit(prompt, max_new_tokens=4)
     ref.run()
     assert eng.outputs[req.rid] == ref.outputs[ref_req.rid]
+
+
+def test_live_engine_fail_node_miss_heal_cycle(tiny_cfg, tiny_params,
+                                               donor_kv):
+    """Wall-clock engine + manual heal: a node failure turns the next
+    ask into a miss (token-identical full-prefill fallback), the
+    delayed write-on-miss restores residency after the recompute, and
+    pump_heal() drains the queued re-replication without duplicating
+    copies that already came back."""
+    from repro.serving.engine import LiveEngine
+
+    rng = np.random.default_rng(21)
+    prefix = rng.integers(0, tiny_cfg.vocab_size, 48)
+    suffix = rng.integers(0, tiny_cfg.vocab_size, 8)
+    prompt = np.concatenate([prefix, suffix])
+    cluster = _live_cluster(donor_kv, [prefix], n_nodes=2,
+                            heal="manual")
+    eng = LiveEngine(tiny_params, tiny_cfg, cluster, resolution="240p")
+    r0 = eng.submit(prompt, reuse_prefix="by-tokens", reuse_tokens=48,
+                    max_new_tokens=4)
+    eng.run()
+    assert r0.storage_hit == "full"
+    holder = r0.storage_node
+    eng.fail_node(holder)
+    assert cluster.heal_queue  # re-replication queued, not teleported
+    r1 = eng.submit(prompt, reuse_prefix="by-tokens", reuse_tokens=48,
+                    max_new_tokens=4)
+    eng.run()
+    assert r1.storage_hit == "miss" and r1.reuse_tokens == 0
+    ref = LiveEngine(tiny_params, tiny_cfg, KVStore(), resolution="240p")
+    ref_req = ref.submit(prompt, max_new_tokens=4)
+    ref.run()
+    assert eng.outputs[r1.rid] == ref.outputs[ref_req.rid]
+    # delayed write-on-miss already restored residency on a live node
+    r2 = eng.submit(prompt, reuse_prefix="by-tokens", reuse_tokens=48,
+                    max_new_tokens=4)
+    eng.run()
+    assert r2.storage_hit == "full" and r2.storage_node != holder
+    assert eng.outputs[r2.rid] == ref.outputs[ref_req.rid]
+    key = next(iter(cluster.catalog))
+    cluster.pump_heal(eng.now())  # no-op: the copy is already back
+    assert sum(1 for n in cluster.nodes if n.contains(key)) == 1
 
 
 @pytest.mark.slow
@@ -516,3 +880,91 @@ def test_cross_env_hit_miss_evict_sequences_agree(tiny_cfg, tiny_params,
     assert "miss" in kinds and "evict" in kinds, \
         "sequence exercised no pressure; test is vacuous"
     assert key_of  # silence unused (kept for debugging readability)
+
+
+@pytest.mark.slow
+def test_cross_env_churn_fail_heal_expire_reject_agree(tiny_cfg,
+                                                       tiny_params,
+                                                       donor_kv):
+    """ISSUE 4 acceptance: a seeded churn trace — admission rejections,
+    TTL expiry, a node failure mid-trace, and the sync ring heal — must
+    replay the identical fail/heal/expire/reject event sequence in the
+    live engine (real manifests, wall clock) and the analytic simulator
+    (synthetic entries, virtual clock)."""
+    from repro.cluster.simulator import MethodSpec, ServingSimulator
+    from repro.serving.engine import LiveEngine
+
+    rng = np.random.default_rng(9)
+    tok_a = rng.integers(0, tiny_cfg.vocab_size, 32)  # ttl=0: expires
+    tok_b = rng.integers(0, tiny_cfg.vocab_size, 40)  # fail/heal target
+    suffix = rng.integers(0, tiny_cfg.vocab_size, 8)
+
+    def build_live():
+        nodes = [StorageNode(f"n{i}") for i in range(2)]
+        c = StorageCluster(nodes, replication=1, heal="sync",
+                           admission="second_hit", admission_min_asks=1)
+        for toks, ttl in ((tok_a, 0.0), (tok_b, None)):
+            kv_k, kv_v = donor_kv(toks)
+            c.register_prefix(toks, kv_k, kv_v, tokens_per_chunk=16,
+                              resolutions=("240p",), ttl=ttl)
+        return c
+
+    live = build_live()
+    keys = list(live.catalog)  # [key_a, key_b] in registration order
+    eng = LiveEngine(tiny_params, tiny_cfg, live, resolution="240p")
+    # access script: a (miss->admit), a (expire->miss->admit),
+    # b (miss->admit), FAIL b's holder, b (miss or heal-hit), a again
+    order = [tok_a, tok_a, tok_b, None, tok_b, tok_a]
+    for toks in order:
+        if toks is None:
+            holder = next(n.node_id for n in live.nodes
+                          if n.contains(keys[1]))
+            eng.fail_node(holder)
+            continue
+        eng.submit(np.concatenate([toks, suffix]),
+                   reuse_prefix="by-tokens", reuse_tokens=len(toks),
+                   max_new_tokens=2)
+        eng.run()
+
+    # simulator side: synthetic twins under the same churn, same keys
+    sim_nodes = [StorageNode(f"n{i}") for i in range(2)]
+    sim_cluster = StorageCluster(sim_nodes, replication=1, heal="sync",
+                                 admission="second_hit",
+                                 admission_min_asks=1)
+    for key in keys:
+        src = live.catalog[key]
+        sim_cluster.register(StoredPrefix(
+            key=key, n_tokens=src.n_tokens,
+            bytes_by_resolution={"240p": src.stored_bytes},
+            raw_kv_bytes=src.raw_kv_bytes, parent=src.parent,
+            ttl=src.ttl, pinned=src.pinned), 0.0)
+    # nothing is resident at registration under second_hit admission;
+    # the recompute admits b onto its ring primary — same ring, same
+    # node id in both environments
+    sim_holder = sim_cluster.primary_node(keys[1]).node_id
+    lens = {id(tok_a): (len(tok_a), keys[0]),
+            id(tok_b): (len(tok_b), keys[1])}
+    reqs = []
+    t_fail = None
+    t = 50.0
+    for toks in order:
+        if toks is None:
+            t_fail = t - 25.0  # between the two neighbouring arrivals
+            continue
+        n_tok, key = lens[id(toks)]
+        reqs.append(Request(rid=len(reqs), arrival=t,
+                            prompt_len=n_tok + 8, reuse_tokens=n_tok,
+                            prefix=key, max_new_tokens=2))
+        t += 50.0
+    spec = MethodSpec("kvfetcher", ratios={"stream": 8.0}, adaptive=False,
+                      fixed_resolution="240p", uses_decode_pool=False)
+    sim = ServingSimulator(tiny_cfg, spec,
+                           bandwidth=BandwidthTrace.constant(0.01),
+                           storage=sim_cluster, chunk_tokens=16,
+                           fail_at=[(t_fail, sim_holder)])
+    sim.run(reqs, max_new_tokens=2)
+
+    assert live.events == sim_cluster.events
+    kinds = [e[0] for e in live.events]
+    for needed in ("fail", "heal", "expire", "reject", "miss", "admit"):
+        assert needed in kinds, f"churn trace exercised no {needed!r}"

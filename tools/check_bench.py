@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Benchmark perf-regression gate (ISSUE 4, bench-gate CI job).
+
+Parses the ``name,us_per_call,derived`` CSV that ``python -m
+benchmarks.run`` prints and compares every **gated** row — the derived
+speedup/retention ratios, where higher is better — against the
+committed ``benchmarks/baselines.json``.  A gated row regressing more
+than the baseline file's tolerance (default 25%) fails the job, so the
+storage/WAN/pipelining wins cannot rot unnoticed:
+
+    PYTHONPATH=src python -m benchmarks.run --only ttft > ttft.csv
+    python tools/check_bench.py ttft.csv
+
+After an intentional perf change, refresh the baselines and commit:
+
+    python tools/check_bench.py ttft.csv --update
+
+Rules
+-----
+* gated rows are those whose name contains ``speedup`` or ``retained``
+  (ratios where bigger is better; raw TTFT seconds are machine-speed
+  dependent and are NOT gated — only ratios are stable across runners)
+* a gated row in the CSV but not in the baselines fails (run --update)
+* a baseline row missing from the CSV fails (a silently dropped
+  comparison is a regression of the gate itself)
+* any ``<module>.FAILED`` row fails
+* improvements pass; baselines are refreshed deliberately, not ratcheted
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DEFAULT_BASELINES = ROOT / "benchmarks" / "baselines.json"
+GATE_MARKERS = ("speedup", "retained")
+DEFAULT_TOLERANCE = 0.25
+
+
+def parse_csv(path: pathlib.Path) -> Tuple[Dict[str, float], List[str]]:
+    """-> ({row_name: derived}, [failed_module_rows])."""
+    rows: Dict[str, float] = {}
+    failed: List[str] = []
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line or line.startswith("#") or \
+                line.startswith("name,us_per_call"):
+            continue
+        parts = line.split(",")
+        if len(parts) < 3:
+            continue
+        name = parts[0]
+        if name.endswith(".FAILED"):
+            failed.append(name)
+            continue
+        try:
+            rows[name] = float(parts[2].split("#")[0])
+        except ValueError:
+            failed.append(f"{name} (unparseable derived {parts[2]!r})")
+    return rows, failed
+
+
+def gated(rows: Dict[str, float]) -> Dict[str, float]:
+    return {k: v for k, v in rows.items()
+            if any(m in k for m in GATE_MARKERS)}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("csv", type=pathlib.Path,
+                    help="CSV printed by `python -m benchmarks.run`")
+    ap.add_argument("--baselines", type=pathlib.Path,
+                    default=DEFAULT_BASELINES)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baselines from this CSV and exit")
+    args = ap.parse_args(argv)
+
+    rows, failed = parse_csv(args.csv)
+    gate = gated(rows)
+    if args.update:
+        if failed:
+            print(f"refusing to --update from a CSV with failures: "
+                  f"{failed}", file=sys.stderr)
+            return 1
+        args.baselines.write_text(json.dumps(
+            {"tolerance": DEFAULT_TOLERANCE,
+             "rows": dict(sorted(gate.items()))}, indent=2) + "\n")
+        print(f"wrote {len(gate)} baseline row(s) -> {args.baselines}")
+        return 0
+
+    base = json.loads(args.baselines.read_text())
+    tol = float(base.get("tolerance", DEFAULT_TOLERANCE))
+    baseline_rows: Dict[str, float] = base["rows"]
+    problems: List[str] = [f"bench module failed: {f}" for f in failed]
+    for name, want in sorted(baseline_rows.items()):
+        got = gate.get(name)
+        if got is None:
+            problems.append(f"{name}: baseline row missing from CSV")
+            continue
+        floor = want * (1.0 - tol)
+        verdict = "ok" if got >= floor else "REGRESSED"
+        print(f"[{verdict}] {name}: {got:.4g} "
+              f"(baseline {want:.4g}, floor {floor:.4g})")
+        if got < floor:
+            problems.append(
+                f"{name}: {got:.4g} < {floor:.4g} "
+                f"(baseline {want:.4g} - {tol:.0%})")
+    for name in sorted(set(gate) - set(baseline_rows)):
+        problems.append(
+            f"{name}: new gated row has no baseline "
+            f"(run tools/check_bench.py <csv> --update and commit)")
+    if problems:
+        print(f"\n{len(problems)} bench-gate failure(s):",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(baseline_rows)} gated ratio(s) within "
+          f"{tol:.0%} of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
