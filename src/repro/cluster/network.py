@@ -8,14 +8,21 @@ show loss and contention, not raw bandwidth, dominate tail TTFT):
     Transmission times integrate the trace exactly, so adaptive-resolution
     decisions see realistic partial-chunk bandwidth shifts (paper Fig. 17).
   * :class:`LossModel` — per-chunk-attempt drop decisions: independent
-    Bernoulli, bursty Gilbert-Elliott, or a scripted drop set for tests.
-    Decisions are keyed on ``(flow, chunk, attempt)`` so a seeded model
-    produces the *same* drop schedule in the analytic simulator and the
-    virtual-clock live engine regardless of event interleaving.
+    Bernoulli, bursty Gilbert-Elliott (per-flow or *shared* cross-flow
+    correlated), or a scripted drop set for tests.  Decisions are keyed
+    on ``(flow, chunk, attempt)`` so a seeded model produces the *same*
+    drop schedule in the analytic simulator and the virtual-clock live
+    engine regardless of event interleaving.
   * :class:`SharedLink` — splits one trace across concurrent fetch flows
     (``fair`` weighted fluid sharing or ``drr`` deficit-round-robin chunk
     interleaving), replacing the old model where every in-flight fetch
-    silently got the full trace bandwidth.
+    silently got the full trace bandwidth.  With ``ramp="slowstart"`` a
+    joining flow's share multiplicatively grows toward its fair share
+    instead of converging instantly (congestion-window-shaped ramp).
+
+:class:`RttEstimator` (Jacobson/Karels SRTT/RTTVAR over chunk service
+times) lives here too: the fetch controller uses it to derive the
+per-flow adaptive retransmit timeout ``rto = srtt + 4*rttvar``.
 
 Units
 -----
@@ -126,6 +133,57 @@ class BandwidthTrace:
 
 
 # ---------------------------------------------------------------------------
+# RTT estimation (Jacobson/Karels)
+# ---------------------------------------------------------------------------
+
+
+class RttEstimator:
+    """Jacobson/Karels smoothed-RTT estimator over chunk service times.
+
+    The fetch controller feeds it the service time (submit -> wire
+    completion) of every *first-attempt* chunk delivery — retransmitted
+    chunks are skipped per Karn's algorithm, since their samples are
+    ambiguous — and reads back the retransmit timeout
+
+        rto = srtt + max(K * rttvar, floor)
+
+    clamped to the caller's ``[min_rto, max_rto]``.  The ``floor`` term
+    plays the role of TCP's clock granularity ``G``: once service times
+    stabilize, ``rttvar`` decays geometrically toward zero and without a
+    floor the deadline would converge onto the completion time itself,
+    turning float jitter into spurious retransmissions.
+    """
+
+    ALPHA = 1.0 / 8.0  # srtt gain
+    BETA = 1.0 / 4.0  # rttvar gain
+    K = 4.0  # variance multiplier in the RTO
+
+    def __init__(self) -> None:
+        self.srtt: Optional[float] = None
+        self.rttvar: float = 0.0
+
+    def observe(self, sample: float) -> None:
+        if sample <= 0:
+            return
+        if self.srtt is None:
+            self.srtt = sample
+            self.rttvar = sample / 2.0
+            return
+        self.rttvar = ((1.0 - self.BETA) * self.rttvar
+                       + self.BETA * abs(self.srtt - sample))
+        self.srtt = (1.0 - self.ALPHA) * self.srtt + self.ALPHA * sample
+
+    def rto(self, min_rto: float, max_rto: float) -> Optional[float]:
+        """Current retransmit timeout, or None before the first sample
+        (the caller seeds the pre-sample deadline from its bandwidth
+        estimate instead)."""
+        if self.srtt is None:
+            return None
+        raw = self.srtt + max(self.K * self.rttvar, min_rto)
+        return min(max(raw, min_rto), max_rto)
+
+
+# ---------------------------------------------------------------------------
 # Chunk loss
 # ---------------------------------------------------------------------------
 
@@ -149,14 +207,26 @@ class LossModel:
                          per attempt *per flow*, so burst structure is
                          deterministic given the per-flow attempt order
                          (which the controller serializes).
+    ``ge_shared``        cross-flow **correlated** bursts: one shared
+                         good/bad chain advanced per ``slot`` seconds of
+                         virtual time (the link's physical state), so
+                         concurrent flows see the same bursts.  The state
+                         of slot ``n`` is a pure function of ``(seed,
+                         n)``-seeded draws and the per-attempt loss draw
+                         stays keyed on ``(flow, chunk, attempt)`` —
+                         environments whose wire timings agree (same
+                         bytes over the same link) replay the identical
+                         schedule regardless of decode/restore timing.
     ``scripted``         an explicit drop set, for tests and docs.
     """
 
     def __init__(self, mode: str, seed: int = 0, *, p: float = 0.0,
                  good_to_bad: float = 0.05, bad_to_good: float = 0.25,
                  p_good: float = 0.001, p_bad: float = 0.5,
+                 slot: float = 0.05,
                  script: Optional[Set[Tuple[int, int, int]]] = None):
-        assert mode in ("bernoulli", "gilbert_elliott", "scripted")
+        assert mode in ("bernoulli", "gilbert_elliott", "ge_shared",
+                        "scripted")
         self.mode = mode
         self.seed = seed
         self.p = p
@@ -164,11 +234,18 @@ class LossModel:
         self.bad_to_good = bad_to_good
         self.p_good = p_good
         self.p_bad = p_bad
+        self.slot = slot  # ge_shared: seconds per link-state step
         self.script = script or set()
         self.drops: List[Tuple[int, int, int]] = []  # decided drop schedule
+        self.drop_slots: List[int] = []  # ge_shared: slot of each drop
         self.attempts = 0
         self._ge_state: Dict[int, bool] = {}  # flow -> in bad state?
         self._ge_step: Dict[int, int] = {}  # flow -> chain step counter
+        self._shared: List[bool] = [False]  # slot idx -> in bad state?
+        # one sequential stream drives the shared chain's transitions
+        # (slot n's state depends only on (seed, draws 1..n), so every
+        # instance replays the same states without a per-slot Generator)
+        self._shared_rng = np.random.default_rng((seed, 0x6E57))
 
     # -- constructors -------------------------------------------------------
     @staticmethod
@@ -191,19 +268,56 @@ class LossModel:
         """Drop exactly the given ``(flow, chunk_seq, attempt)`` triples."""
         return LossModel("scripted", script=set(drops))
 
+    @staticmethod
+    def correlated(seed: int = 0, *, slot: float = 0.05,
+                   good_to_bad: float = 0.05, bad_to_good: float = 0.25,
+                   p_good: float = 0.001,
+                   p_bad: float = 0.5) -> "LossModel":
+        """Cross-flow correlated bursts: one **shared** Gilbert-Elliott
+        link state sampled once per ``slot`` seconds of virtual time, so
+        concurrent flows see bad periods together (a congested or fading
+        WAN segment drops everyone's chunks at once, not one flow's)."""
+        return LossModel("ge_shared", seed, slot=slot,
+                         good_to_bad=good_to_bad, bad_to_good=bad_to_good,
+                         p_good=p_good, p_bad=p_bad)
+
     # -- queries ------------------------------------------------------------
     def _draw(self, flow: int, seq: int, attempt: int) -> float:
         rng = np.random.default_rng(
             (self.seed, int(flow), int(seq), int(attempt)))
         return float(rng.random())
 
-    def dropped(self, flow: int, seq: int, attempt: int) -> bool:
-        """Decide (and record) whether this transmission attempt is lost."""
+    def _shared_bad(self, slot_idx: int) -> bool:
+        """State of the shared chain at time slot ``slot_idx``: a pure
+        function of the seed and the slot (transition draws come from one
+        sequential seeded stream, advanced — and memoized — front-to-
+        back, so query order never changes the states)."""
+        while len(self._shared) <= slot_idx:
+            u = float(self._shared_rng.random())
+            bad = self._shared[-1]
+            bad = (u >= self.bad_to_good) if bad else \
+                (u < self.good_to_bad)
+            self._shared.append(bad)
+        return self._shared[slot_idx]
+
+    def dropped(self, flow: int, seq: int, attempt: int,
+                now: float = 0.0) -> bool:
+        """Decide (and record) whether this transmission attempt is lost.
+        ``now`` is the attempt's delivery instant on the virtual clock —
+        only the ``ge_shared`` mode reads it (to index the shared link
+        state); the other modes stay keyed purely on the triple."""
         self.attempts += 1
         if self.mode == "scripted":
             lost = (flow, seq, attempt) in self.script
         elif self.mode == "bernoulli":
             lost = self._draw(flow, seq, attempt) < self.p
+        elif self.mode == "ge_shared":
+            slot_idx = max(int(now / self.slot), 0)
+            bad = self._shared_bad(slot_idx)
+            lost = self._draw(flow, seq, attempt) < \
+                (self.p_bad if bad else self.p_good)
+            if lost:
+                self.drop_slots.append(slot_idx)
         else:  # gilbert_elliott: advance this flow's chain one step
             step = self._ge_step.get(flow, 0)
             self._ge_step[flow] = step + 1
@@ -223,7 +337,7 @@ class LossModel:
         baselines that model loss as a goodput haircut)."""
         if self.mode == "bernoulli":
             return self.p
-        if self.mode == "gilbert_elliott":
+        if self.mode in ("gilbert_elliott", "ge_shared"):
             denom = self.good_to_bad + self.bad_to_good
             frac_bad = self.good_to_bad / denom if denom else 0.0
             return frac_bad * self.p_bad + (1 - frac_bad) * self.p_good
@@ -242,6 +356,7 @@ class _Xfer:
     left: float
     t_ready: float
     cb: Callable[[float], None]  # called with the finish time
+    cancelled: bool = False  # abandoned duplicate: cb never fires
 
 
 class SharedLink:
@@ -266,6 +381,19 @@ class SharedLink:
               so a weight-2 flow gets ~2x the bytes of a weight-1 flow
               while both are backlogged.
 
+    Ramp
+    ----
+    ``ramp="instant"`` (default) reproduces the classic fluid model: a
+    joining flow snaps straight to its fair share.  ``ramp="slowstart"``
+    shapes the join like a congestion window: the flow starts at
+    ``ramp_init`` of its fair share and doubles every ``ramp_interval``
+    seconds (in-flight transfers are re-timed at each ramp epoch) until
+    it reaches the full share.  Capacity a ramping flow leaves unclaimed
+    goes to fully-ramped flows; if every flow is still ramping the link
+    runs underutilized — exactly the slow-start underutilization real
+    transports pay.  Under ``drr`` the ramp factor scales the flow's
+    deficit quantum instead.
+
     A single-flow ``fair`` link degenerates to the bare trace, so wrapping
     a dedicated link in :class:`SharedLink` changes nothing — which is why
     :func:`make_link` always wraps.
@@ -275,11 +403,20 @@ class SharedLink:
     DRR_QUANTUM = 4e6
 
     def __init__(self, trace: BandwidthTrace, policy: str = "fair",
-                 loss: Optional[LossModel] = None):
+                 loss: Optional[LossModel] = None, ramp: str = "instant",
+                 ramp_init: float = 0.125, ramp_interval: float = 0.5):
         assert policy in ("fair", "drr"), policy
+        assert ramp in ("instant", "slowstart"), ramp
+        # a zero initial share would stall fair-share math (and DRR's
+        # quantum accumulation) forever
+        assert 0.0 < ramp_init <= 1.0, ramp_init
         self.trace = trace
         self.policy = policy
         self.loss = loss
+        self.ramp = ramp
+        self.ramp_init = ramp_init
+        self.ramp_interval = ramp_interval
+        self._ramp: Dict[int, float] = {}  # flow -> share factor (<= 1)
         self._push: Optional[Callable[[float, Callable], None]] = None
         self._weights: Dict[int, float] = {}
         # fair-mode state: fluid frontier + in-flight transfers
@@ -303,24 +440,46 @@ class SharedLink:
         """Receive the controller's event-queue ``push(t, fn)`` handle."""
         self._push = push
 
-    def open_flow(self, flow: int, weight: float = 1.0) -> None:
+    def open_flow(self, flow: int, weight: float = 1.0,
+                  t: Optional[float] = None) -> None:
+        """Register a flow.  With ``ramp="slowstart"`` and a join time
+        ``t``, the flow starts at ``ramp_init`` of its share and doubles
+        every ``ramp_interval`` seconds (epochs ride the bound event
+        queue); without ``t`` (or in ``instant`` mode) it joins at full
+        share."""
         self._weights[flow] = float(weight)
         if flow not in self._order:
             self._order.append(flow)
             self._deficit.setdefault(flow, 0.0)
+        if self.ramp == "slowstart" and t is not None \
+                and self._push is not None:
+            self._ramp[flow] = self.ramp_init
+            self._push(t + self.ramp_interval,
+                       lambda tt, fl=flow: self._ramp_epoch(fl, tt))
+        else:
+            self._ramp.pop(flow, None)
+
+    def _ramp_epoch(self, flow: int, t: float) -> None:
+        """One slow-start doubling; re-times in-flight transfers."""
+        cur = self._ramp.get(flow)
+        if cur is None or flow not in self._weights:
+            return  # flow finished ramping or already closed
+        if self.policy == "fair":
+            self._advance(t)
+        nxt = min(1.0, cur * 2.0)
+        if nxt >= 1.0:
+            self._ramp.pop(flow, None)
+        else:
+            self._ramp[flow] = nxt
+            self._push(t + self.ramp_interval,
+                       lambda tt, fl=flow: self._ramp_epoch(fl, tt))
+        if self.policy == "fair":
+            self._reschedule()
 
     def close_flow(self, flow: int) -> None:
         self._weights.pop(flow, None)
-        busy = ((self._serving is not None and self._serving.flow == flow)
-                or any(x.flow == flow for x in self._queue))
-        if flow in self._order and not busy:
-            i = self._order.index(flow)
-            self._order.remove(flow)
-            if self._rr > i:
-                self._rr -= 1
-            if self._order:
-                self._rr %= len(self._order)
-            self._deficit.pop(flow, None)
+        self._ramp.pop(flow, None)
+        self._reap(flow)
 
     # -- trace passthrough (estimator seeding; bulk blocking baseline) ------
     def bw_at(self, t: float) -> float:
@@ -335,10 +494,11 @@ class SharedLink:
 
     # -- arbitrated submission ----------------------------------------------
     def submit(self, flow: int, nbytes: float, t0: float,
-               cb: Callable[[float], None]) -> None:
+               cb: Callable[[float], None]) -> object:
         """Start an ``nbytes`` chunk transfer for ``flow`` at ``t0``;
         ``cb(t_done)`` fires from the controller's event queue when the
-        wire transfer completes under the arbitration policy."""
+        wire transfer completes under the arbitration policy.  Returns an
+        opaque handle accepted by :meth:`cancel`."""
         assert self._push is not None, "SharedLink.bind() not called"
         x = _Xfer(flow, float(nbytes), float(nbytes), t0, cb)
         if self.policy == "fair":
@@ -349,15 +509,66 @@ class SharedLink:
             self._queue.append(x)
             if self._serving is None:
                 self._dispatch(max(t0, self._busy_until))
+        return x
+
+    def cancel(self, handle: object, t: float) -> None:
+        """Abandon an in-flight transfer (a superseded retransmit
+        duplicate): its callback never fires.  Under ``fair`` the
+        remaining bytes leave the fluid at ``t`` and the other transfers
+        are re-timed; under ``drr`` a queued chunk is pulled from the
+        queue, while a chunk already on the wire finishes occupying it
+        (those bytes are committed) with its completion suppressed."""
+        x = handle
+        if not isinstance(x, _Xfer) or x.cancelled:
+            return
+        x.cancelled = True
+        if self.policy == "fair":
+            if x in self._xfers:
+                self._advance(t)
+                self._xfers.remove(x)
+                self._reschedule()
+        else:
+            if x in self._queue:
+                self._queue.remove(x)
+                self._reap(x.flow)
+
+    def _reap(self, flow: int) -> None:
+        """Drop a closed flow from the DRR round-robin state once it has
+        nothing queued or serving (deferred close_flow cleanup)."""
+        if flow in self._weights or flow not in self._order:
+            return
+        busy = ((self._serving is not None and self._serving.flow == flow)
+                or any(x.flow == flow for x in self._queue))
+        if busy:
+            return
+        i = self._order.index(flow)
+        self._order.remove(flow)
+        if self._rr > i:
+            self._rr -= 1
+        if self._order:
+            self._rr %= len(self._order)
+        self._deficit.pop(flow, None)
 
     # -- fair: fluid weighted processor sharing -----------------------------
     def _shares(self) -> Dict[int, float]:
+        """Per-transfer capacity fractions: each flow gets its (ramp-
+        scaled) weighted share split evenly over its in-flight transfers;
+        capacity that ramping flows leave unclaimed is redistributed to
+        fully-ramped flows by weight (or left idle if all are ramping)."""
         per_flow: Dict[int, int] = {}
         for x in self._xfers:
             per_flow[x.flow] = per_flow.get(x.flow, 0) + 1
-        W = sum(self._weights.get(f, 1.0) for f in per_flow)
-        return {id(x): self._weights.get(x.flow, 1.0) / W
-                / per_flow[x.flow] for x in self._xfers}
+        w = {f: self._weights.get(f, 1.0) for f in per_flow}
+        W = sum(w.values())
+        share = {f: w[f] / W * self._ramp.get(f, 1.0) for f in per_flow}
+        leftover = 1.0 - sum(share.values())
+        full = [f for f in per_flow if f not in self._ramp]
+        if leftover > 1e-12 and full:
+            Wf = sum(w[f] for f in full)
+            for f in full:
+                share[f] += leftover * w[f] / Wf
+        return {id(x): share[x.flow] / per_flow[x.flow]
+                for x in self._xfers}
 
     def _advance(self, t: float) -> None:
         """Drain in-flight bytes at the current shares up to time ``t``."""
@@ -407,7 +618,11 @@ class SharedLink:
                 done = [nxt]
         self._xfers = [x for x in self._xfers if x not in done]
         for x in done:
-            x.cb(t)
+            # a callback earlier in this loop may have cancelled a later
+            # transfer that drained in the same tick (e.g. a fetch abort
+            # at a shared trace boundary) — honor it, as _drr_done does
+            if not x.cancelled:
+                x.cb(t)
         self._reschedule()
 
     # -- drr: serialized wire, deficit-round-robin chunk interleave ---------
@@ -421,7 +636,8 @@ class SharedLink:
             if flow not in backlogged:
                 continue
             self._deficit[flow] = self._deficit.get(flow, 0.0) + \
-                self.DRR_QUANTUM * self._weights.get(flow, 1.0)
+                self.DRR_QUANTUM * self._weights.get(flow, 1.0) * \
+                self._ramp.get(flow, 1.0)
             head = next(x for x in self._queue if x.flow == flow)
             if self._deficit[flow] < head.nbytes:
                 continue
@@ -438,7 +654,10 @@ class SharedLink:
 
     def _drr_done(self, x: _Xfer, t: float) -> None:
         self._serving = None
-        x.cb(t)  # may submit the flow's next chunk synchronously
+        if x.cancelled:  # abandoned mid-wire: bytes burned, no callback
+            self._reap(x.flow)
+        else:
+            x.cb(t)  # may submit the flow's next chunk synchronously
         if self._serving is None and self._queue:
             self._dispatch(max(t, self._busy_until))
 
@@ -447,18 +666,37 @@ class SharedLink:
         return len(self._xfers) + len(self._queue) + \
             (1 if self._serving is not None else 0)
 
+    @property
+    def n_flows(self) -> int:
+        """Open flows on this link (the serving node knows its own
+        concurrency — used to seed projected service times before the
+        first goodput sample lands)."""
+        return len(self._weights)
+
+    def ramp_factor(self, flow: int) -> float:
+        """Current slow-start factor of ``flow`` (1.0 once fully ramped
+        or in ``instant`` mode).  A sender knows its own congestion
+        window: the fetch controller divides its projected service time
+        by this, so self-imposed ramp slowness never reads as loss."""
+        return self._ramp.get(flow, 1.0)
+
 
 def make_link(bandwidth, policy: Optional[str] = None,
-              loss: Optional[LossModel] = None) -> SharedLink:
+              loss: Optional[LossModel] = None,
+              ramp: Optional[str] = None) -> SharedLink:
     """Wrap a :class:`BandwidthTrace` (or anything exposing ``bw_at`` /
     ``transmit``) into a :class:`SharedLink`; pass an existing link
-    through unchanged (asserting no conflicting loss/policy request).
-    ``policy=None`` means "caller doesn't care": bare traces get
-    ``fair``, existing links keep whatever they were built with."""
+    through unchanged (asserting no conflicting loss/policy/ramp
+    request).  ``policy=None`` / ``ramp=None`` mean "caller doesn't
+    care": bare traces get ``fair`` / ``instant``, existing links keep
+    whatever they were built with."""
     if isinstance(bandwidth, SharedLink):
         assert loss is None or bandwidth.loss is loss, \
             "conflicting LossModel for an already-built SharedLink"
         assert policy is None or bandwidth.policy == policy, \
             f"link is {bandwidth.policy!r}, caller asked for {policy!r}"
+        assert ramp is None or bandwidth.ramp == ramp, \
+            f"link ramps {bandwidth.ramp!r}, caller asked for {ramp!r}"
         return bandwidth
-    return SharedLink(bandwidth, policy=policy or "fair", loss=loss)
+    return SharedLink(bandwidth, policy=policy or "fair", loss=loss,
+                      ramp=ramp or "instant")

@@ -79,6 +79,15 @@ class MethodSpec:
     # tables: 180-256 MB per chunk) instead of deriving sizes from the
     # measured compression ratio. Used by the Fig. 17/23 experiments.
     use_table_sizes: bool = False
+    # Retransmit-timeout mode: "adaptive" = per-flow Jacobson/Karels
+    # estimator (default), "fixed" = projected wire time + the constant
+    # PipelineConfig.retransmit_timeout grace (the non-adaptive baseline
+    # the ttft.wan.adaptive.* bench rows compare against).
+    rto_mode: str = "adaptive"
+    # Per-chunk transmission-attempt cap; exhaustion (every copy lost)
+    # aborts the fetch and falls back to full prefill via
+    # notify_fetch_miss instead of stalling the request forever.
+    max_attempts: int = 64
 
 
 def kvfetcher_spec(ratios: Dict[str, float]) -> MethodSpec:
@@ -129,7 +138,11 @@ class SimResult:
     decode_pool_utilization: float
     decompress_buffer_high_water: float
     sim_time: float
-    retransmits: int = 0  # chunk attempts resent due to WAN loss
+    retransmits: int = 0  # loss-driven (genuine) resends
+    # resends whose original (slow, not lost) copy later delivered: the
+    # duplicate was cancelled and its bytes wasted — the signature of a
+    # retransmit timeout shorter than the contended chunk service time
+    spurious_retransmits: int = 0
 
     def fetching(self) -> List[Request]:
         return [r for r in self.requests if r.needs_fetch]
@@ -188,6 +201,7 @@ class ServingSimulator:
                  bandwidth: BandwidthTrace,
                  loss: Optional[LossModel] = None,
                  link_policy: Optional[str] = None,  # None -> "fair"
+                 link_ramp: Optional[str] = None,  # None -> "instant"
                  storage: Optional[StorageCluster] = None,
                  # scripted storage-node churn: fail_at=[(t, node_id)]
                  # kills nodes mid-run, recover_at brings them back
@@ -208,12 +222,15 @@ class ServingSimulator:
         # nodes without a dedicated link).
         self.storage = storage
         if storage is not None and (loss is not None
-                                    or link_policy is not None):
+                                    or link_policy is not None
+                                    or link_ramp is not None):
             assert all(n.link is None for n in storage.nodes), \
-                "loss=/link_policy= only shape the default link; nodes " \
-                "with their own links must carry their own LossModel/" \
-                "policy: StorageNode(link=make_link(trace, policy=, loss=))"
-        self.link = make_link(bandwidth, policy=link_policy, loss=loss)
+                "loss=/link_policy=/link_ramp= only shape the default " \
+                "link; nodes with their own links must carry their own " \
+                "LossModel/policy/ramp: StorageNode(link=make_link(" \
+                "trace, policy=, loss=, ramp=))"
+        self.link = make_link(bandwidth, policy=link_policy, loss=loss,
+                              ramp=link_ramp)
         self.bw = self.link.trace
         self.table = table
         self.pool = DecodePool(table) if (table and
@@ -232,7 +249,9 @@ class ServingSimulator:
                 blocking_fetch=method.blocking_fetch,
                 gpu_decomp_tokens_per_s=method.gpu_decomp_tokens_per_s,
                 use_table_sizes=method.use_table_sizes,
-                resolutions=RESOLUTIONS),
+                resolutions=RESOLUTIONS,
+                rto_mode=method.rto_mode,
+                max_attempts=method.max_attempts),
             hooks=_SimHooks(self))
         # scripted node churn, merged and time-ordered; heal transfers
         # (heal="link") schedule their completions on the controller's
@@ -404,4 +423,6 @@ class ServingSimulator:
                          decompress_buffer_high_water=(
                              self.ctrl.buffer_high_water),
                          sim_time=now,
-                         retransmits=self.ctrl.retransmits_total)
+                         retransmits=self.ctrl.retransmits_total,
+                         spurious_retransmits=(
+                             self.ctrl.spurious_retransmits_total))

@@ -863,7 +863,10 @@ class StorageCluster:
             "simulator/virtual-clock engine, or use heal='sync'/'manual'"
         self._heal_flow -= 1
         flow = self._heal_flow  # negative: never collides with a rid
-        link.open_flow(flow, weight=self.heal_weight)
+        # join at the heal weight; on a ramp="slowstart" link the heal
+        # flow slow-starts like any other joiner (live fetches keep
+        # priority while the ring re-converges)
+        link.open_flow(flow, weight=self.heal_weight, t=now)
 
         def done(t: float, entry=entry, target=target, link=link,
                  flow=flow) -> None:

@@ -34,6 +34,10 @@ class FetchPlan:
     chunks: List[PlannedChunk]
     n_layers_total: int
     next_to_send: int = 0
+    # Set when the controller abandons the fetch (a chunk exhausted
+    # max_attempts with every copy lost); the request falls back to a
+    # full prefill via notify_fetch_miss and the plan never completes.
+    aborted: bool = False
 
     def layers_ready(self) -> int:
         """Contiguous prefix of layers whose K and V are fully restored."""

@@ -12,11 +12,17 @@ diverge.  Per chunk the controller
     arbitrates concurrent fetches; a bare `BandwidthTrace` is wrapped into
     a single-flow link) — or, with the multi-node storage tier, over the
     *storage node's own* link passed per fetch via ``start(link=...)``,
-    so placement changes the observed path — retrying per-chunk on WAN
-    loss: a transmission
-    attempt the `LossModel` drops is detected ``retransmit_timeout``
-    seconds after its wire time and resent, while — in pipelined mode —
-    later chunks keep streaming (selective repeat),
+    so placement changes the observed path — arming a retransmit timer
+    at each attempt's submit time: the deadline comes from a per-flow
+    Jacobson/Karels SRTT/RTTVAR estimator over observed chunk service
+    times (``rto_mode="adaptive"``, ``rto = srtt + 4*rttvar`` clamped to
+    ``[min_rto, max_rto]`` with exponential backoff) or from the
+    projected wire time plus the fixed ``retransmit_timeout`` grace
+    (``rto_mode="fixed"``).  A timer that fires resends the chunk while
+    — in pipelined mode — later chunks keep streaming (selective
+    repeat); a resend that duplicated a copy which later delivers is a
+    *spurious* retransmit: the duplicate is cancelled on the link and
+    counted separately from loss-driven retransmits,
   * decodes it on the decode pool (or the CacheGen-style serialized GPU
     decompressor, or instantly for raw transfers), and
   * fires a restore event, at which the environment hook performs the
@@ -27,9 +33,19 @@ condition and, when satisfied, calls
 ``scheduler.notify_early_admissible`` so suffix prefill can start while
 later layer groups are still in flight.  A fetch with any retransmit
 outstanding is never admitted early: the lost chunk's layer group is not
-actually buffered, so admitting would stall compute (the chunk-latency
-estimate also inflates naturally, since latencies are measured from the
-*first* transmission attempt).
+actually buffered, so admitting would stall compute.  The per-layer
+delivery estimate is the Appx A.3 per-resolution projection from the
+live bandwidth estimate and the profiled decode table (loss-rate
+inflation applies only when the flow's link actually carries a
+`LossModel`), so admission stays tight under ramp/loss jitter instead
+of chasing a lagging mean of observed chunk latencies.
+
+A chunk that exhausts ``max_attempts`` with every copy lost does not
+stall its request forever: the fetch is aborted and routed through
+``scheduler.notify_fetch_miss`` so the request falls back to a full
+prefill (for an already-early-admitted request the cap is instead
+lifted — the engine is attending over restored prefix KV and a fallback
+is no longer possible).
 
 Environment differences (real codec work vs. analytic cost models, real
 blob sizes vs. ratio-derived sizes) live behind :class:`FetchHooks`; the
@@ -53,7 +69,7 @@ from repro.core.fetch import FetchPlan, PlannedChunk
 from repro.core.layout import RESOLUTION_ORDER
 from repro.core.pipelining import non_blocking_ok
 from repro.core.scheduler import ReqState, Request
-from repro.cluster.network import make_link
+from repro.cluster.network import RttEstimator, make_link
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,11 +86,27 @@ class PipelineConfig:
     gpu_decomp_tokens_per_s: float = 0.0  # CacheGen CUDA decompression
     use_table_sizes: bool = False  # Appx A.2 table sizes, not real bytes
     resolutions: Tuple[str, ...] = RESOLUTION_ORDER
-    # WAN loss handling: a dropped attempt is detected this many seconds
-    # after its wire transfer would have completed (ack timeout), then the
-    # chunk is resent at the same resolution.
+    # WAN retransmission: every transmission attempt arms a retransmit
+    # timer at its submit time — a real sender only learns about loss
+    # from a missing ack, so the old model's drop detection at the
+    # actual wire-completion instant (an oracle no transport has) is
+    # gone.  rto_mode="adaptive" (default) derives the deadline from
+    # the per-flow Jacobson/Karels estimator — rto = srtt + 4*rttvar
+    # over observed chunk service times, clamped to [min_rto, max_rto],
+    # doubled on consecutive fires for the same chunk; "fixed" keeps a
+    # constant retransmit_timeout grace beyond the projected wire time
+    # (the non-adaptive baseline the ttft.wan.adaptive.* bench rows
+    # compare against).
+    rto_mode: str = "adaptive"
+    # fixed-mode grace beyond the projected wire time; also pads the
+    # adaptive pre-sample seed (3x projected service + this grace).
     retransmit_timeout: float = 0.05
-    max_attempts: int = 64  # hard cap per chunk (stalled-link guard)
+    min_rto: float = 0.02
+    max_rto: float = 10.0
+    # Hard cap of transmission attempts per chunk.  A chunk that
+    # exhausts it with every copy lost aborts the fetch and falls back
+    # to full prefill via notify_fetch_miss (no eternal stall).
+    max_attempts: int = 64
 
 
 class FetchHooks:
@@ -113,6 +145,21 @@ class FetchHooks:
 
 
 @dataclasses.dataclass
+class _ChunkTx:
+    """Transmit-side bookkeeping for one chunk under the send-time
+    retransmit-timer model (ISSUE 5)."""
+    # attempt number -> SharedLink handle of the copy on the wire
+    in_flight: Dict[int, object] = dataclasses.field(default_factory=dict)
+    # resend attempt -> the in-flight copies it duplicated at fire time;
+    # classified spurious when one of them delivers, genuine (a real
+    # retransmit) once every one of them is lost.
+    pending_dups: Dict[int, Set[int]] = dataclasses.field(
+        default_factory=dict)
+    timer_attempt: int = 0  # attempt the armed retransmit timer covers
+    fires: int = 0  # consecutive timer fires (backoff exponent)
+
+
+@dataclasses.dataclass
 class ActiveFetch:
     """Controller-side state of one in-flight fetch."""
     req: Request
@@ -127,7 +174,12 @@ class ActiveFetch:
     gpu_decomp_until: float = 0.0
     chunk_latencies: List[float] = dataclasses.field(default_factory=list)
     pending_retx: Set[int] = dataclasses.field(default_factory=set)
-    retransmits: int = 0  # dropped attempts resent so far
+    retransmits: int = 0  # loss-driven (genuine) resends so far
+    spurious_retransmits: int = 0  # resends of copies that delivered
+    est_samples: int = 0  # goodput samples folded into ``est`` so far
+    # per-flow Jacobson/Karels service-time estimator driving the RTO
+    rtt: RttEstimator = dataclasses.field(default_factory=RttEstimator)
+    tx: Dict[int, _ChunkTx] = dataclasses.field(default_factory=dict)
 
 
 class FetchController:
@@ -160,6 +212,7 @@ class FetchController:
         self.now = 0.0
         self.buffer_high_water = 0.0
         self.retransmits_total = 0  # across all fetches (WAN stats)
+        self.spurious_retransmits_total = 0  # duplicates of live copies
         self._events: List[Tuple[float, int, Callable[[float], None]]] = []
         self._eid = 0
 
@@ -198,9 +251,11 @@ class FetchController:
 
     def drain(self, plan: FetchPlan) -> float:
         """Run this plan's pipeline to completion (the ``sync`` mode);
-        returns the completion time on the virtual clock."""
+        returns the completion time on the virtual clock.  An aborted
+        plan (``max_attempts`` exhausted, fetch fell back to prefill)
+        drains to the abort instant instead of spinning forever."""
         t = self.now
-        while not plan.done:
+        while not (plan.done or plan.aborted):
             nt = self.pump_next()
             if nt is None:
                 raise RuntimeError(
@@ -225,7 +280,7 @@ class FetchController:
         f = ActiveFetch(req, plan, BandwidthEstimator(lnk.bw_at(now)),
                         trans_free_at=now, link=lnk)
         self.active[req.rid] = f
-        lnk.open_flow(req.rid, weight=getattr(req, "weight", 1.0))
+        lnk.open_flow(req.rid, weight=getattr(req, "weight", 1.0), t=now)
         if self.config.blocking_fetch:
             self._start_blocking(f, now)
         else:
@@ -244,8 +299,7 @@ class FetchController:
             pc.resolution = res
             pc.t_transmit_start = now
             total += self._chunk_bytes(f, pc, res)
-        if f.link.loss is not None:
-            total /= max(1.0 - f.link.loss.mean_loss_rate(), 1e-3)
+        total = self._loss_inflate(f.link, total)
         t_done = f.link.transmit(total, now)
         if self.pool is not None:
             _, t_done = self.pool.decode(res, t_done,
@@ -262,6 +316,24 @@ class FetchController:
         self._push(t_done, on_bulk_done)
 
     # -- per-chunk pipeline -------------------------------------------------
+    @staticmethod
+    def _loss_inflate(link, estimate: float) -> float:
+        """Inflate a transfer-time/byte estimate by the expected
+        retransmission rate of the flow's OWN link.  A lossless (e.g.
+        storage-node) link pays no haircut even when other links carry a
+        LossModel, and a zero-rate model (scripted) is a no-op."""
+        loss = link.loss if link is not None else None
+        if loss is not None:
+            rate = loss.mean_loss_rate()
+            if rate > 0:
+                return estimate / max(1.0 - rate, 1e-3)
+        return estimate
+
+    def _decode_size_scale(self, nbytes: float, res: str) -> float:
+        """Decode cost scales with actual bytes relative to the decode
+        table's reference chunk (floored: tiny chunks still pay setup)."""
+        return max(nbytes / (self.table.chunk_size_mb[res] * 1e6), 0.05)
+
     def _chunk_bytes(self, f: ActiveFetch, pc: PlannedChunk,
                      res: str) -> float:
         if self.config.use_table_sizes and self.table is not None \
@@ -299,7 +371,7 @@ class FetchController:
 
     def _send_next(self, f: ActiveFetch, now: float) -> None:
         plan = f.plan
-        if plan.next_to_send >= len(plan.chunks):
+        if plan.aborted or plan.next_to_send >= len(plan.chunks):
             return
         seq = plan.next_to_send
         pc = plan.chunks[seq]
@@ -311,54 +383,191 @@ class FetchController:
 
     def _transmit(self, f: ActiveFetch, pc: PlannedChunk, seq: int,
                   attempt: int, now: float) -> None:
-        """Submit one transmission attempt of chunk ``seq`` to the link.
-        Retransmissions resend the same resolution (the blob already
-        chosen); ``pc.t_transmit_start`` keeps the *first* attempt's start
-        so latency stats include the full loss penalty."""
+        """Submit one transmission attempt of chunk ``seq`` to the link
+        and arm its retransmit timer at the submit time (the sender's
+        view: the clock starts when the chunk leaves, not when its bytes
+        happen to land).  Retransmissions resend the same resolution (the
+        blob already chosen); ``pc.t_transmit_start`` keeps the *first*
+        attempt's start so latency stats include the full loss penalty."""
         nbytes = self._chunk_bytes(f, pc, pc.resolution)
         t_start = max(now, f.trans_free_at)
-        pc.attempts = attempt
+        pc.attempts = max(pc.attempts, attempt)
         if attempt == 1:
             pc.t_transmit_start = t_start
-        f.link.submit(
+        st = f.tx.setdefault(seq, _ChunkTx())
+        handle = f.link.submit(
             f.req.rid, nbytes, t_start,
             lambda t, f=f, pc=pc, seq=seq, attempt=attempt, nbytes=nbytes,
             t_start=t_start: self._on_wire(f, pc, seq, attempt, nbytes,
                                            t_start, t))
+        st.in_flight[attempt] = handle
+        st.timer_attempt = attempt
+        deadline = t_start + self._rto(f, nbytes, st.fires)
+        self._push(deadline,
+                   lambda t, f=f, pc=pc, seq=seq, attempt=attempt:
+                   self._on_timeout(f, pc, seq, attempt, t))
+
+    def _rto(self, f: ActiveFetch, nbytes: float, fires: int) -> float:
+        """Retransmit deadline offset for the next attempt of a chunk of
+        ``nbytes`` bytes, after ``fires`` consecutive timer fires (each
+        fire doubles the deadline — classic exponential backoff)."""
+        cfg = self.config
+        expected = nbytes / max(f.est.est, 1.0)  # projected service time
+        if f.est_samples == 0:
+            # cold start: the estimator still holds the raw trace rate,
+            # but the sender at least knows how many flows its own link
+            # carries and its own slow-start window — project the
+            # (ramp-scaled) fair share, not the full pipe
+            expected *= max(getattr(f.link, "n_flows", 1), 1)
+            if hasattr(f.link, "ramp_factor"):
+                expected /= max(f.link.ramp_factor(f.req.rid), 1e-3)
+        if cfg.rto_mode == "adaptive":
+            base = f.rtt.rto(cfg.min_rto, cfg.max_rto)
+            if base is None:
+                # no service-time sample yet: seed conservatively, like
+                # TCP's large initial RTO (3x the projected wire time)
+                base = 3.0 * expected + cfg.retransmit_timeout
+        else:
+            base = expected + cfg.retransmit_timeout
+        # never cap below the base: a deadline ahead of the *projected*
+        # completion would guarantee a duplicate storm
+        return min(base * (2.0 ** fires), max(cfg.max_rto, base))
+
+    def _self_in_flight(self, f: ActiveFetch) -> int:
+        """Transmission attempts of this flow currently on the wire."""
+        return sum(len(st.in_flight) for st in f.tx.values())
+
+    def _on_timeout(self, f: ActiveFetch, pc: PlannedChunk, seq: int,
+                    attempt: int, now: float) -> None:
+        """Retransmit timer fired for ``attempt`` of chunk ``seq``.  If
+        the chunk already landed (or the fetch ended) the timer is stale.
+        Otherwise resend — classifying the resend as a genuine retransmit
+        when every prior copy is known lost, or keeping it *provisional*
+        while copies are still in flight (resolved at their delivery /
+        loss: see ``_on_wire``)."""
+        st = f.tx.get(seq)
+        if (st is None or pc.t_transmit_done is not None
+                or f.req.rid not in self.active):
+            return  # chunk landed or fetch finished: stale timer
+        if attempt != st.timer_attempt:
+            return  # superseded by a newer attempt's timer
+        if attempt in st.in_flight and self._self_in_flight(f) > 1:
+            # The sender can account for its own multiplexing: another
+            # of this flow's transfers shares the wire with this one, so
+            # the missing ack is self-explained — defer rather than fire
+            # a duplicate.  (Cross-flow contention stays invisible, as
+            # for a real transport, and genuinely fires spuriously.)
+            nbytes = self._chunk_bytes(f, pc, pc.resolution)
+            self._push(now + self._rto(f, nbytes, st.fires),
+                       lambda t, f=f, pc=pc, seq=seq, attempt=attempt:
+                       self._on_timeout(f, pc, seq, attempt, t))
+            return
+        nxt = pc.attempts + 1
+        if nxt > self.config.max_attempts:
+            if not f.req.early_admitted:
+                # not yet admitted (waiting_for_kv, or parked in the
+                # fetch_agnostic FCFS queue): a full-prefill fallback is
+                # still possible
+                if not st.in_flight:
+                    self._abort(f, now)  # every copy lost: fall back
+                return  # copies still on the wire may yet land
+            # early-admitted request: the engine is already attending
+            # over restored prefix KV, a fallback prefill is no longer
+            # possible — lift the cap and keep retrying instead
+        st.fires += 1
+        dup_of = set(st.in_flight)
+        if dup_of:
+            st.pending_dups[nxt] = dup_of  # classified at resolution
+        else:
+            f.retransmits += 1  # every prior copy known lost: genuine
+            self.retransmits_total += 1
+        f.pending_retx.add(seq)
+        self._transmit(f, pc, seq, nxt, now)
 
     def _on_wire(self, f: ActiveFetch, pc: PlannedChunk, seq: int,
                  attempt: int, nbytes: float, t_start: float,
                  now: float) -> None:
         """Wire transfer of one attempt finished: either the chunk landed
-        (advance to decode) or the loss model dropped it (arm the
-        retransmit timer).  Pipelined mode streams the next chunk either
-        way — selective repeat keeps the pipe busy during loss recovery."""
+        (advance to decode; superseded duplicates are cancelled and any
+        provisional resends counted spurious) or the loss model dropped
+        it (provisional resends that only duplicated lost copies become
+        genuine retransmits).  Pipelined mode streams the next chunk
+        either way — selective repeat keeps the pipe busy during loss
+        recovery."""
+        st = f.tx.setdefault(seq, _ChunkTx())
+        st.in_flight.pop(attempt, None)
         if self.config.pipelined and attempt == 1:
             self._send_next(f, now)
+        if pc.t_transmit_done is not None:
+            return  # a duplicate of an already-landed chunk
         loss = f.link.loss
-        if (loss is not None and attempt < self.config.max_attempts
-                and loss.dropped(f.req.rid, seq, attempt)):
+        if loss is not None and loss.dropped(f.req.rid, seq, attempt, now):
             f.pending_retx.add(seq)
-            f.retransmits += 1
-            self.retransmits_total += 1
-            t_retry = now + self.config.retransmit_timeout
-            self._push(t_retry,
-                       lambda t, f=f, pc=pc, seq=seq, attempt=attempt:
-                       self._transmit(f, pc, seq, attempt + 1, t))
+            genuine = 0
+            for r, dup in list(st.pending_dups.items()):
+                dup.discard(attempt)
+                if not dup:  # duplicated copies all lost: was necessary
+                    genuine += 1
+                    del st.pending_dups[r]
+            f.retransmits += genuine
+            self.retransmits_total += genuine
+            self._maybe_dead(f, pc, seq, st, now)
             return
+        # landed: the first delivered copy wins
+        if attempt == 1:
+            # Karn's algorithm: only unambiguous (first-attempt) service
+            # times feed the RTO estimator
+            f.rtt.observe(now - t_start)
+        for handle in st.in_flight.values():
+            f.link.cancel(handle, now)  # cancel superseded duplicates
+        st.in_flight.clear()
+        for r in list(st.pending_dups):
+            if r == attempt:  # the resend itself delivered first
+                f.retransmits += 1
+                self.retransmits_total += 1
+            else:  # duplicated a copy that delivered: wasted bytes
+                f.spurious_retransmits += 1
+                self.spurious_retransmits_total += 1
+        st.pending_dups.clear()
         f.pending_retx.discard(seq)
         # goodput sample over the full chunk history (first attempt start
         # -> landing), so the estimate degrades under loss/contention
         f.est.observe(int(nbytes), now - pc.t_transmit_start)
+        f.est_samples += 1
         self._on_transmitted(f, pc, nbytes, pc.t_transmit_start, now)
+
+    def _maybe_dead(self, f: ActiveFetch, pc: PlannedChunk, seq: int,
+                    st: _ChunkTx, now: float) -> None:
+        """Abort the fetch when a chunk has exhausted ``max_attempts``
+        with no copy left on the wire (nothing can deliver it anymore)."""
+        if (pc.t_transmit_done is None and not st.in_flight
+                and pc.attempts >= self.config.max_attempts
+                and not f.req.early_admitted
+                and f.req.rid in self.active):
+            self._abort(f, now)
+
+    def _abort(self, f: ActiveFetch, now: float) -> None:
+        """``max_attempts`` exhausted with every copy lost: abandon the
+        fetch and route the request through ``notify_fetch_miss`` so it
+        falls back to a full prefill instead of hanging in
+        ``waiting_for_kv`` forever."""
+        f.plan.aborted = True
+        for st in f.tx.values():
+            for handle in st.in_flight.values():
+                f.link.cancel(handle, now)
+            st.in_flight.clear()
+            st.pending_dups.clear()
+        self.active.pop(f.req.rid, None)
+        f.link.close_flow(f.req.rid)
+        self.sched.notify_fetch_miss(f.req, now)
 
     def _on_transmitted(self, f: ActiveFetch, pc: PlannedChunk,
                         nbytes: float, t_start: float, now: float) -> None:
         pc.t_transmit_done = now
         if self.pool is not None:
-            ref = self.table.chunk_size_mb[pc.resolution] * 1e6
-            _, t_dec = self.pool.decode(pc.resolution, now,
-                                        size_scale=max(nbytes / ref, 0.05))
+            _, t_dec = self.pool.decode(
+                pc.resolution, now,
+                size_scale=self._decode_size_scale(nbytes, pc.resolution))
         elif self.config.gpu_decomp_tokens_per_s:
             dur = self.hooks.gpu_decomp_seconds(f, pc)
             t_dec = max(now, f.gpu_decomp_until) + dur
@@ -394,6 +603,46 @@ class FetchController:
         self.sched.notify_fetch_done(f.req, now)
 
     # -- Appx A.3 layer-wise early admission --------------------------------
+    def _projected_chunk_interval(self, f: ActiveFetch,
+                                  now: float) -> float:
+        """Appx A.3 per-resolution projection of the steady-state chunk
+        delivery interval: transmit time from the live bandwidth estimate
+        (inflated by the expected retransmission rate only when THIS
+        flow's link carries a `LossModel`) and decode time from the
+        profiled decode table at the pool's current load.  Replaces the
+        mean of recent observed chunk latencies, which lags badly under
+        the jitter a slow-start ramp or bursty loss introduces.  Without
+        a decode table the observed-latency fallback remains."""
+        if self.table is None:
+            return (float(np.mean(f.chunk_latencies[-4:]))
+                    if f.chunk_latencies else 1.0)
+        plan = f.plan
+        pc = plan.chunks[min(plan.next_to_send, len(plan.chunks) - 1)]
+        res = pc.resolution or f.active_res or self.config.fixed_resolution
+        avail = self._available_res(pc)
+        if avail and res not in avail:
+            res = avail[0]
+        nbytes = self._chunk_bytes(f, pc, res)
+        # lossless links pay no goodput haircut (satellite regression)
+        tau_trans = self._loss_inflate(f.link,
+                                       nbytes / max(f.est.est, 1.0))
+        if self.pool is not None and res in self.table.latency \
+                and self.table.chunk_size_mb.get(res):
+            tau_dec = self.table.decode_latency(
+                res, self.pool.load_at(now) + 1) \
+                * self._decode_size_scale(nbytes, res)
+        elif self.config.gpu_decomp_tokens_per_s:
+            tau_dec = self.hooks.gpu_decomp_seconds(f, pc)
+        else:
+            tau_dec = 0.0
+        tau_restore = self.hooks.restore_seconds(f, pc)
+        if self.config.pipelined:
+            # transmit and decode of successive chunks overlap: the
+            # steady-state interval is the slower stage, plus the
+            # (serial) restore event
+            return max(tau_trans, tau_dec) + tau_restore
+        return tau_trans + tau_dec + tau_restore
+
     def _maybe_admit_early(self, f: ActiveFetch, now: float) -> None:
         if f.pending_retx:
             # A dropped chunk's layer group is NOT buffered even though
@@ -406,9 +655,8 @@ class FetchController:
         L = len(comp)
         total = max(f.plan.n_layers_total, 1)
         buffered = int(round(f.req.layers_ready * L / total))
-        rate = (float(np.mean(f.chunk_latencies[-4:]))
-                if f.chunk_latencies else 1.0)
-        per_layer_dec = rate * len(f.plan.chunks) / max(L, 1)
+        per_layer_dec = (self._projected_chunk_interval(f, now)
+                         * len(f.plan.chunks) / max(L, 1))
         dec = [per_layer_dec] * L
         if non_blocking_ok(dec, comp, buffered):
             self.sched.notify_early_admissible(f.req, now)

@@ -116,19 +116,26 @@ class FetchingAwareScheduler:
             self.waiting.appendleft(req)
 
     def notify_fetch_miss(self, req: Request, now: float) -> None:
-        """Storage-tier miss: nothing to fetch — the request falls back
-        to a full prefill.  It re-enters admission immediately (there is
-        no fetch to wait for); under ``fetch_agnostic`` it simply stops
-        blocking the queue head since ``needs_fetch`` turns False.
+        """Nothing (more) to fetch — the request falls back to a full
+        prefill: a storage-tier miss, or a WAN transport abort after
+        ``max_attempts`` exhausted.  It re-enters admission immediately
+        (there is no fetch to wait for); under ``fetch_agnostic`` it
+        simply stops blocking the queue head since ``needs_fetch`` turns
+        False.  A transport abort keeps the request's original storage
+        resolution (the tier DID hit; the network failed), so
+        ``storage_hit``/``requested_reuse_tokens`` are only stamped when
+        still unset.
 
-        Resolution of the miss is the *delayed write-on-miss* hook: the
-        environment watches for this request's first token and then
-        calls ``StorageCluster.notify_recompute_done`` with
+        Resolution of a storage miss is the *delayed write-on-miss*
+        hook: the environment watches for this request's first token and
+        then calls ``StorageCluster.notify_recompute_done`` with
         ``req.storage_miss_key`` — the recomputed KV exists only from
         that moment, so the storage tier must not re-admit earlier."""
-        req.requested_reuse_tokens = req.reuse_tokens
+        if req.requested_reuse_tokens is None:
+            req.requested_reuse_tokens = req.reuse_tokens
         req.reuse_tokens = 0
-        req.storage_hit = "miss"
+        if req.storage_hit is None:
+            req.storage_hit = "miss"
         if req.state is ReqState.WAITING_FOR_KV:
             self.waiting_for_kv.remove(req)
             req.state = ReqState.WAITING

@@ -43,6 +43,27 @@ def fixed_context_trace(context_len: int, *, n_requests: int = 4,
             for i in range(n_requests)]
 
 
+def wan_burst_trace(rng: np.random.Generator, context_len: int, *,
+                    n_requests: int = 4, window: float = 2.0,
+                    suffix_tokens: int = 1_000,
+                    weights: Optional[Sequence[float]] = None,
+                    max_new_tokens: int = 32) -> List[Request]:
+    """A burst of fetching requests whose arrivals land (seeded-uniform,
+    sorted) inside one short ``window`` — the adaptive-transport stress
+    shape: flows join a contended link at staggered instants, so fair
+    shares (and, with ``ramp="slowstart"``, ramp factors) shift while
+    chunks are mid-flight.  Optional per-request link ``weights`` drive
+    weighted-fair / DRR arbitration.  Deterministic for a given rng."""
+    arrivals = np.sort(rng.uniform(0.0, window, n_requests))
+    return [Request(rid=i, arrival=float(arrivals[i]),
+                    prompt_len=context_len,
+                    reuse_tokens=context_len - suffix_tokens,
+                    prefix=f"pfx{i}", max_new_tokens=max_new_tokens,
+                    weight=(float(weights[i]) if weights is not None
+                            else 1.0))
+            for i in range(n_requests)]
+
+
 @dataclasses.dataclass(frozen=True)
 class PrefixSpec:
     """One node of the reusable-prefix trie: a registered prefix of

@@ -22,9 +22,12 @@ cluster simulator uses.  Two operating modes:
 
 In virtual-clock mode the network is a WAN-grade model: concurrent
 fetches split the trace via `repro.cluster.network.SharedLink` (weighted
-``fair`` fluid sharing or ``drr`` chunk round-robin, ``link_policy=``)
-and a seeded ``loss=`` `LossModel` drops chunk attempts which the
-controller retransmits — restoration stays bit-exact, only timing moves.
+``fair`` fluid sharing or ``drr`` chunk round-robin, ``link_policy=``;
+``link_ramp="slowstart"`` shapes joins like a congestion window) and a
+seeded ``loss=`` `LossModel` (including cross-flow correlated bursts)
+drops chunk attempts which the controller retransmits under a per-flow
+Jacobson/Karels adaptive timeout (``rto_mode=``) — restoration stays
+bit-exact, only timing moves.
 
 The ``store`` may be a flat `KVStore` or a multi-node `StorageCluster`
 (docs/storage_tier.md): with a cluster, every fetch resolves through a
@@ -111,6 +114,9 @@ class LiveEngine:
                  bandwidth=None,
                  loss: Optional[LossModel] = None,
                  link_policy: Optional[str] = None,  # None -> "fair"
+                 link_ramp: Optional[str] = None,  # None -> "instant"
+                 rto_mode: str = "adaptive",  # or "fixed" (baseline)
+                 use_table_sizes: bool = False,  # model Appx A.2 sizes
                  decode_table: Optional[DecodeTable] = None,
                  cost: Optional[EngineCostModel] = None):
         assert fetch_mode in ("sync", "async")
@@ -128,25 +134,30 @@ class LiveEngine:
         self._clock = 0.0
         self.virtual = bandwidth is not None
         assert self.virtual or (fetch_mode == "sync" and loss is None
-                                and link_policy is None), \
-            "WAN options (async fetch, loss=, link_policy=) need a " \
-            "bandwidth trace (virtual clock)"
+                                and link_policy is None
+                                and link_ramp is None), \
+            "WAN options (async fetch, loss=, link_policy=, link_ramp=) " \
+            "need a bandwidth trace (virtual clock)"
         self.cost = cost
         self.ctrl: Optional[FetchController] = None
         if isinstance(store, StorageCluster) and (loss is not None
-                                                  or link_policy is not None):
+                                                  or link_policy is not None
+                                                  or link_ramp is not None):
             assert all(n.link is None for n in store.nodes), \
-                "loss=/link_policy= only shape the default link; nodes " \
-                "with their own links must carry their own LossModel/" \
-                "policy: StorageNode(link=make_link(trace, policy=, loss=))"
+                "loss=/link_policy=/link_ramp= only shape the default " \
+                "link; nodes with their own links must carry their own " \
+                "LossModel/policy/ramp: StorageNode(link=make_link(" \
+                "trace, policy=, loss=, ramp=))"
         if self.virtual:
             if self.cost is None:
                 self.cost = EngineCostModel(cfg, CHIPS["h20"], 1)
             pool = DecodePool(decode_table) if decode_table else None
             # concurrent fetches contend for one WAN link (fair or DRR
-            # split) and survive seeded chunk loss via retransmission —
-            # the same link model the simulator pumps
-            link = make_link(bandwidth, policy=link_policy, loss=loss)
+            # split, optionally slow-start ramped) and survive seeded
+            # chunk loss via adaptive-RTO retransmission — the same link
+            # model the simulator pumps
+            link = make_link(bandwidth, policy=link_policy, loss=loss,
+                             ramp=link_ramp)
             self.ctrl = FetchController(
                 self.sched, link, table=decode_table, pool=pool,
                 config=PipelineConfig(
@@ -154,7 +165,9 @@ class LiveEngine:
                     fixed_resolution=resolution,
                     pipelined=fetch_mode == "async",
                     layerwise_admission=(fetch_mode == "async"
-                                         and policy == "kvfetcher")),
+                                         and policy == "kvfetcher"),
+                    use_table_sizes=use_table_sizes,
+                    rto_mode=rto_mode),
                 hooks=_EngineHooks(self))
             if isinstance(store, StorageCluster):
                 # heal="link" re-replication transfers share the

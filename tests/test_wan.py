@@ -49,16 +49,20 @@ class _Hooks(FetchHooks):
 
 def _controller(sched, *, loss=None, policy="fair", comp=None,
                 gbps=1.0, nbytes=50e6, pipelined=True, hooks=None,
-                timeout=0.05):
-    link = make_link(BandwidthTrace.constant(gbps), policy=policy,
-                     loss=loss)
+                timeout=0.05, trace=None, ramp=None, rto_mode="adaptive",
+                max_attempts=64, blocking=False):
+    link = make_link(trace or BandwidthTrace.constant(gbps),
+                     policy=policy, loss=loss, ramp=ramp)
     return FetchController(
         sched, link, table=H20_TABLE, pool=DecodePool(H20_TABLE),
         config=PipelineConfig(adaptive=False, fixed_resolution="1080p",
                               pipelined=pipelined,
                               layerwise_admission=comp is not None,
                               resolutions=RES,
-                              retransmit_timeout=timeout),
+                              retransmit_timeout=timeout,
+                              rto_mode=rto_mode,
+                              max_attempts=max_attempts,
+                              blocking_fetch=blocking),
         hooks=hooks or _Hooks(nbytes, comp))
 
 
@@ -74,6 +78,26 @@ def _one_fetch(ctrl_kw=None, reuse=30_000, n_layers=9):
     ctrl.start(fr, plan, 0.0)
     ctrl.pump(float("inf"))
     return sched, req, plan, ctrl
+
+
+def _staggered(arrivals, *, ramp=None, rto_mode="adaptive", policy="fair",
+               loss=None, trace=None, reuse=30_000):
+    """Start one fetch per arrival time (flows join a live link)."""
+    sched = _RecSched("kvfetcher", max_running=len(arrivals) + 1)
+    reqs = []
+    for rid, t in enumerate(arrivals):
+        r = Request(rid=rid, arrival=t, prompt_len=reuse + 1_000,
+                    reuse_tokens=reuse, prefix=f"p{rid}")
+        sched.submit(r, t)
+        reqs.append(r)
+    sched.schedule(0.0)
+    ctrl = _controller(sched, policy=policy, ramp=ramp,
+                       rto_mode=rto_mode, loss=loss, trace=trace)
+    for r in sched.take_fetches():
+        ctrl.pump(r.arrival)
+        ctrl.start(r, synthetic_plan(r.rid, reuse, 9, 10_000), r.arrival)
+    ctrl.pump(float("inf"))
+    return reqs, ctrl
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +261,295 @@ def test_contention_and_loss_compose():
 
 
 # ---------------------------------------------------------------------------
+# adaptive transport (ISSUE 5): RTO, spurious retransmits, fallback
+# ---------------------------------------------------------------------------
+
+def test_rtt_estimator_jacobson_karels():
+    from repro.cluster.network import RttEstimator
+
+    est = RttEstimator()
+    assert est.rto(0.02, 10.0) is None  # no sample yet
+    for _ in range(16):
+        est.observe(0.4)
+    # constant samples: srtt == sample, rttvar decays -> floor margin
+    assert est.srtt == pytest.approx(0.4)
+    rto = est.rto(0.02, 10.0)
+    assert 0.4 < rto < 0.5
+    # a jittery burst inflates rttvar well past the new srtt
+    est.observe(1.6)
+    assert est.rto(0.02, 10.0) > 1.6
+    # clamps
+    assert est.rto(5.0, 10.0) >= 5.0
+    assert est.rto(0.02, 0.1) == pytest.approx(0.1)
+
+
+def test_spurious_retransmit_cancelled_and_counted():
+    """Satellite regression: a slow (NOT lost) chunk whose timer fires
+    must cancel the duplicate once the original lands and count it under
+    spurious_retransmits, never retransmits — scripted bandwidth
+    collapse, no LossModel at all."""
+    # 1 Gbps while the RTO converges, then a 50x collapse mid-plan
+    trace = BandwidthTrace.steps([(0, 1.0), (1.0, 0.02)])
+    sched, req, plan, ctrl = _one_fetch({"trace": trace}, reuse=10_000)
+    assert plan.done and req.fetch_done is not None
+    assert ctrl.spurious_retransmits_total > 0
+    assert ctrl.retransmits_total == 0  # nothing was ever lost
+    assert ctrl.link.in_flight == 0  # every duplicate was cancelled
+    slow = [pc for pc in plan.chunks if pc.attempts > 1]
+    assert slow, "the collapse never provoked a duplicate"
+    for pc in plan.chunks:
+        assert pc.t_restored is not None  # duplicates never block restore
+
+
+def test_adaptive_rto_beats_fixed_on_jittery_link():
+    """Jacobson's argument: a fixed grace period fires on every above-
+    estimate service time, while SRTT/RTTVAR absorbs the jitter."""
+    rng = np.random.default_rng(0)
+    trace = BandwidthTrace.jittered(rng, 1.0, duration=120.0,
+                                    seg_len=0.3, rel_std=0.45)
+    spurious = {}
+    for mode in ("fixed", "adaptive"):
+        sched, req, plan, ctrl = _one_fetch(
+            {"trace": trace, "rto_mode": mode})
+        assert plan.done and req.fetch_done is not None
+        assert ctrl.retransmits_total == 0  # lossless: only duplicates
+        spurious[mode] = ctrl.spurious_retransmits_total
+    assert spurious["adaptive"] < spurious["fixed"], spurious
+    assert spurious["fixed"] > 0
+
+
+def test_max_attempts_exhaustion_falls_back_to_full_prefill():
+    """Satellite regression: exhausting max_attempts must not stall the
+    request forever — the fetch aborts through notify_fetch_miss and the
+    fallback full prefill still produces a first token."""
+    from repro.configs import get_config
+    from repro.cluster.simulator import MethodSpec, ServingSimulator
+
+    cfg = get_config("yi-34b")
+
+    def run(loss, max_attempts=3):
+        spec = MethodSpec("kvfetcher", ratios={"stream": 8.0},
+                          adaptive=False, fixed_resolution="1080p",
+                          uses_decode_pool=False,
+                          layerwise_admission=True,
+                          max_attempts=max_attempts)
+        sim = ServingSimulator(cfg, spec, chip="h20", n_chips=2,
+                               bandwidth=BandwidthTrace.constant(8.0),
+                               loss=loss)
+        req = Request(rid=0, arrival=0.0, prompt_len=22_000,
+                      reuse_tokens=20_000, prefix="p",
+                      max_new_tokens=4)
+        res = sim.run([req], max_new_tokens=4)
+        return req, res
+
+    # chunk 0 lost on every allowed attempt -> fetch aborts, falls back
+    loss = LossModel.scripted({(0, 0, 1), (0, 0, 2), (0, 0, 3)})
+    req, res = run(loss)
+    assert req.storage_hit == "miss" and req.reuse_tokens == 0
+    assert req.requested_reuse_tokens == 20_000
+    assert req.t_first_token is not None, "fallback TTFT not recorded"
+    assert res.retransmits == 2  # attempts 2 and 3 were loss-driven
+    clean_req, _ = run(None)
+    # the fallback recomputes the whole prompt: strictly slower than the
+    # clean fetch-reuse run of the same request
+    assert req.ttft > clean_req.ttft
+
+
+def test_max_attempts_fallback_unblocks_fetch_agnostic_hol():
+    """The cap must also bind under the fetch_agnostic policy (whose
+    fetching requests wait in the FCFS queue, not waiting_for_kv): an
+    exhausted fetch falls back instead of head-of-line-blocking the
+    queue forever."""
+    from repro.configs import get_config
+    from repro.cluster.simulator import MethodSpec, ServingSimulator
+
+    cfg = get_config("yi-34b")
+    spec = MethodSpec("kvfetcher", ratios={"stream": 8.0}, adaptive=False,
+                      fixed_resolution="1080p", uses_decode_pool=False,
+                      scheduler_policy="fetch_agnostic", max_attempts=3)
+    sim = ServingSimulator(cfg, spec, chip="h20", n_chips=2,
+                           bandwidth=BandwidthTrace.constant(8.0),
+                           loss=LossModel.scripted(
+                               {(0, 0, 1), (0, 0, 2), (0, 0, 3)}))
+    head = Request(rid=0, arrival=0.0, prompt_len=22_000,
+                   reuse_tokens=20_000, prefix="p", max_new_tokens=4)
+    behind = Request(rid=1, arrival=0.0, prompt_len=1_000,
+                     max_new_tokens=4)
+    sim.run([head, behind], max_new_tokens=4)
+    assert head.reuse_tokens == 0 and head.t_first_token is not None, \
+        "exhausted fetch_agnostic head must fall back, not stall"
+    assert behind.t_first_token is not None, \
+        "fallback must unblock the request behind the head"
+
+
+def test_slowstart_rejects_zero_ramp_init():
+    from repro.cluster.network import SharedLink
+
+    with pytest.raises(AssertionError):
+        SharedLink(BandwidthTrace.constant(1.0), ramp="slowstart",
+                   ramp_init=0.0)
+
+
+def test_blocking_goodput_haircut_only_with_lossy_link():
+    """Satellite regression: the bulk-transfer loss haircut must apply
+    only when the flow's own link carries real loss."""
+    times = {}
+    for name, loss in (("none", None),
+                       ("lossless", LossModel.scripted(set())),
+                       ("lossy", LossModel.bernoulli(0.2, seed=1))):
+        sched, req, plan, _ = _one_fetch(
+            {"blocking": True, "loss": loss}, reuse=10_000)
+        assert plan.done
+        times[name] = req.fetch_done
+    assert times["none"] == pytest.approx(times["lossless"]), \
+        "a zero-rate LossModel must not inflate the bulk transfer"
+    assert times["lossy"] > 1.1 * times["none"]
+
+
+def test_admission_projection_skips_haircut_on_lossless_link():
+    """The decode-table early-admission projection inflates transmit
+    time by the expected retransmission rate only on lossy links."""
+    def interval(loss):
+        sched = _RecSched("kvfetcher", max_running=4)
+        req = Request(rid=0, arrival=0.0, prompt_len=32_000,
+                      reuse_tokens=30_000, prefix="p")
+        sched.submit(req, 0.0)
+        sched.schedule(0.0)
+        (fr,) = sched.take_fetches()
+        ctrl = _controller(sched, loss=loss)
+        ctrl.start(fr, synthetic_plan(0, 30_000, 9, 10_000), 0.0)
+        return ctrl._projected_chunk_interval(ctrl.active[0], 0.0)
+
+    base = interval(None)
+    assert interval(LossModel.scripted(set())) == pytest.approx(base)
+    lossy = interval(LossModel.bernoulli(0.2, seed=3))
+    assert lossy > base
+
+
+def test_early_admission_uses_decode_table_projection():
+    """The projection is resolution-derived: transmit and decode overlap
+    in pipelined mode, so the interval is max(transmit, decode) plus the
+    restore event — and it still admits on a clean link."""
+    sched, req, plan, ctrl = _one_fetch({"comp": [10.0] * 9})
+    assert req.early_admitted  # projection admitted on a clean link
+    sched2 = _RecSched("kvfetcher", max_running=4)
+    r2 = Request(rid=0, arrival=0.0, prompt_len=32_000,
+                 reuse_tokens=30_000, prefix="p")
+    sched2.submit(r2, 0.0)
+    sched2.schedule(0.0)
+    (fr2,) = sched2.take_fetches()
+    ctrl2 = _controller(sched2)
+    ctrl2.start(fr2, synthetic_plan(0, 30_000, 9, 10_000), 0.0)
+    f = ctrl2.active[0]
+    proj = ctrl2._projected_chunk_interval(f, 0.0)
+    # 50 MB over 1 Gbps is transmit-bound (decode ~0.04s scaled): the
+    # interval is the transmit time plus the 0.002s restore hook
+    tau_trans = 50e6 / ctrl2.link.bw_at(0.0)
+    assert proj == pytest.approx(tau_trans + 0.002, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# correlated (shared Gilbert-Elliott) loss
+# ---------------------------------------------------------------------------
+
+def _correlated_pair(seed=9):
+    loss = LossModel.correlated(seed=seed, slot=0.3, good_to_bad=0.35,
+                                bad_to_good=0.35, p_good=0.0, p_bad=1.0)
+    sched = _RecSched("kvfetcher", max_running=4)
+    rs = []
+    for rid in range(2):
+        r = Request(rid=rid, arrival=0.0, prompt_len=31_000,
+                    reuse_tokens=30_000, prefix=f"p{rid}")
+        sched.submit(r, 0.0)
+        rs.append(r)
+    sched.schedule(0.0)
+    ctrl = _controller(sched, loss=loss)
+    for r in sched.take_fetches():
+        ctrl.start(r, synthetic_plan(r.rid, 30_000, 9, 10_000), 0.0)
+    ctrl.pump(float("inf"))
+    return rs, ctrl, loss
+
+
+def test_correlated_loss_hits_concurrent_flows_together():
+    rs, ctrl, loss = _correlated_pair()
+    assert all(r.fetch_done is not None for r in rs)
+    assert loss.drops and len(loss.drop_slots) == len(loss.drops)
+    by_flow = {0: set(), 1: set()}
+    for (flow, _, _), slot in zip(loss.drops, loss.drop_slots):
+        by_flow[flow].add(slot)
+    assert by_flow[0] and by_flow[1], "both flows must see the bursts"
+    assert by_flow[0] & by_flow[1], \
+        "a shared link state must drop concurrent flows in the same slot"
+
+
+def test_correlated_loss_deterministic_across_runs():
+    d1 = _correlated_pair()[2].drops
+    d2 = _correlated_pair()[2].drops
+    assert d1 == d2 and d1
+    other = _correlated_pair(seed=10)[2].drops
+    assert other != d1
+
+
+def test_correlated_mean_loss_rate_matches_ge():
+    ge = LossModel.gilbert_elliott(good_to_bad=0.1, bad_to_good=0.3,
+                                   p_good=0.0, p_bad=0.5)
+    corr = LossModel.correlated(good_to_bad=0.1, bad_to_good=0.3,
+                                p_good=0.0, p_bad=0.5)
+    assert corr.mean_loss_rate() == pytest.approx(ge.mean_loss_rate())
+
+
+# ---------------------------------------------------------------------------
+# slow-start link ramp
+# ---------------------------------------------------------------------------
+
+def test_slowstart_ramp_costs_the_joiner_then_converges():
+    (solo_i,), _ = _staggered([0.0])
+    (solo_s,), ctrl = _staggered([0.0], ramp="slowstart")
+    # ramp-up underutilization: the slow-started flow finishes later...
+    assert solo_s.fetch_done > solo_i.fetch_done
+    # ...but only by the finite ramp cost (1/8 -> 1 doubling each epoch)
+    assert solo_s.fetch_done < solo_i.fetch_done + 2.5
+    assert ctrl.link._ramp == {}  # fully ramped state reclaimed
+
+
+def test_slowstart_ramp_protects_the_incumbent_at_join():
+    """A flow joining mid-transfer under slow start takes bandwidth
+    gradually: the join hurts the incumbent less (its degradation versus
+    a solo run shrinks) and costs the joiner more, relative to the
+    instant-convergence model."""
+    (solo_i,), _ = _staggered([0.0])
+    (solo_s,), _ = _staggered([0.0], ramp="slowstart")
+    instant, _ = _staggered([0.0, 2.0])
+    slow, _ = _staggered([0.0, 2.0], ramp="slowstart")
+    hit_instant = instant[0].fetch_done - solo_i.fetch_done
+    hit_slow = slow[0].fetch_done - solo_s.fetch_done
+    assert hit_slow < hit_instant, (hit_slow, hit_instant)
+    assert slow[1].fetch_done > instant[1].fetch_done
+
+
+def test_slowstart_ramp_drr_quantum():
+    reqs, ctrl = _staggered([0.0, 0.5], policy="drr", ramp="slowstart")
+    assert all(r.fetch_done is not None for r in reqs)
+    link = ctrl.link
+    assert link._order == [] and link._ramp == {} and link.in_flight == 0
+
+
+def test_adaptive_rto_cuts_spurious_under_staggered_contention():
+    """Flows joining a contended link shift everyone's service times;
+    the adaptive RTO absorbs the shifts where the fixed grace fires."""
+    rng = np.random.default_rng(1)
+    trace = BandwidthTrace.jittered(rng, 1.0, duration=200.0,
+                                    seg_len=0.3, rel_std=0.4)
+    counts = {}
+    for mode in ("fixed", "adaptive"):
+        reqs, ctrl = _staggered([0.0, 0.7, 1.4, 2.1], rto_mode=mode,
+                                trace=trace)
+        assert all(r.fetch_done is not None for r in reqs)
+        counts[mode] = ctrl.spurious_retransmits_total
+    assert counts["adaptive"] < counts["fixed"], counts
+
+
+# ---------------------------------------------------------------------------
 # network.py API contracts
 # ---------------------------------------------------------------------------
 
@@ -346,3 +659,63 @@ def test_loss_schedule_identical_in_simulator_and_live_engine(
                      max_new_tokens=2)
     eng2.run()
     assert eng.outputs[r.rid] == eng2.outputs[r2.rid]
+
+
+@pytest.mark.slow
+def test_correlated_loss_schedule_identical_in_simulator_and_live_engine(
+        tiny_cfg, tiny_params, registered_store):
+    """ISSUE 5 acceptance: the shared (cross-flow correlated) Gilbert-
+    Elliott state is indexed by virtual time, so the determinism contract
+    is "identical wire timings -> identical drop/burst schedules".  Both
+    environments model Appx A.2 table chunk sizes over the same link
+    (``use_table_sizes``), which makes their wire timelines byte-
+    identical — the seeded correlated model must then replay the exact
+    same drop schedule AND the same burst slots through the real live
+    engine and the analytic simulator."""
+    from repro.core.adaptive import DecodeTable
+    from repro.cluster.simulator import (MethodSpec, RESOLUTIONS,
+                                         ServingSimulator)
+    from repro.serving.engine import LiveEngine
+
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, tiny_cfg.vocab_size, 48)
+    full = np.concatenate([prefix, rng.integers(0, tiny_cfg.vocab_size, 8)])
+    store, key = registered_store(prefix, tokens_per_chunk=16,
+                                  resolutions=("240p",))
+    table = DecodeTable(
+        name="xenv", n_decoders=2,
+        latency={r: (0.04, 0.05) for r in RESOLUTIONS},
+        penalty={"240p": 0.01, "480p": 0.008, "640p": 0.004, "1080p": 0.0},
+        chunk_size_mb={r: 0.004 for r in RESOLUTIONS})
+    trace = BandwidthTrace.constant(0.0006)  # 75 kB/s: ~53 ms per chunk
+
+    def corr():
+        return LossModel.correlated(seed=31, slot=0.08, good_to_bad=0.35,
+                                    bad_to_good=0.4, p_good=0.0,
+                                    p_bad=0.85)
+
+    loss_eng = corr()
+    eng = LiveEngine(tiny_params, tiny_cfg, store, policy="kvfetcher",
+                     fetch_mode="async", bandwidth=trace, loss=loss_eng,
+                     decode_table=table, use_table_sizes=True,
+                     resolution="240p")
+    r = eng.submit(full, reuse_prefix=key, reuse_tokens=48,
+                   max_new_tokens=2)
+    eng.run()
+    assert r.rid == 0 and r.fetch_done is not None
+
+    loss_sim = corr()
+    spec = MethodSpec("kvfetcher", ratios={"stream": 8.0}, adaptive=False,
+                      fixed_resolution="240p", uses_decode_pool=True,
+                      use_table_sizes=True, layerwise_admission=True)
+    sim = ServingSimulator(tiny_cfg, spec, bandwidth=trace, loss=loss_sim,
+                           table=table, chunk_tokens=16)
+    req = Request(rid=0, arrival=0.0, prompt_len=56, reuse_tokens=48,
+                  prefix="p")
+    sim.run([req], max_new_tokens=2)
+    assert req.fetch_done is not None
+
+    assert loss_eng.drops, "correlated loss never fired; test is vacuous"
+    assert sorted(loss_eng.drops) == sorted(loss_sim.drops)
+    assert sorted(loss_eng.drop_slots) == sorted(loss_sim.drop_slots), \
+        "burst slots must replay identically across environments"
