@@ -33,6 +33,13 @@ policies (popularity replication vs plain consistent hashing under
 contention), and a live-engine partial hit whose ancestor-fetch +
 tail-recompute output must equal a full recompute token-for-token.
 
+The ``ttft.prefetch.*`` rows exercise speculative prefix prefetch with
+the host-memory staging tier (docs/prefetch.md) on a slow 2 Gbps WAN:
+a session-continuation ask whose child was warmed between turns must
+strictly beat the same ask served reactively, while an un-predicted
+bystander sharing the link sees no TTFT regression (its demand fetch
+cancels in-flight speculation).  Both ratios are regression-gated.
+
 The ``ttft.storage.failover.*`` rows kill 1 of 3 storage nodes
 mid-trace (ISSUE 4): with replication>=2 the mean post-failure TTFT
 must stay within 30% of the no-failure run (the ring heal streams over
@@ -444,6 +451,86 @@ def _storage_failover_rows() -> List[Row]:
     return rows
 
 
+def _prefetch_rows() -> List[Row]:
+    """Speculative prefix prefetch + host staging tier (docs/prefetch.md):
+    a session-continuation trace on a slow 2 Gbps WAN.  The parent's
+    demand hit heats its child; the speculation streams over the storage
+    node's link at the heal weight between turns and lands in host DRAM,
+    so the continuation ask skips the WAN entirely and pays only the
+    PCIe-class h2d copy.  Acceptance (both ratios gated): the warm hit
+    strictly beats the identical ask served reactively, AND an
+    un-predicted bystander sharing the link sees no TTFT regression —
+    its demand fetch cancels in-flight speculation on arrival."""
+    from repro.cluster.staging import HostStagingTier, PrefetchManager
+    from repro.cluster.storage import (StorageCluster, StorageNode,
+                                       synthetic_stored_prefix)
+    from repro.data.workload import prefix_trie_specs
+
+    specs = prefix_trie_specs(2, 2, base_tokens=40_000, ext_tokens=20_000)
+    parent, child = specs[0], specs[1]  # trie.r0.d0 -> trie.r0.d1
+    bystander = specs[2]                # trie.r1.d0: never predicted
+
+    def run_case(with_prefetch: bool):
+        node = StorageNode("n0", link=BandwidthTrace.constant(2.0))
+        cluster = StorageCluster([node])
+        for s in specs:
+            cluster.register(synthetic_stored_prefix(
+                s.key, s.n_tokens,
+                raw_bytes_per_token=CFG.kv_bytes_per_token(),
+                ratios=RATIOS, parent=s.parent), 0.0)
+        pf = (PrefetchManager(cluster, HostStagingTier(None),
+                              transport="link")
+              if with_prefetch else None)
+        # parent opens the session, the bystander contends mid-trace
+        # (cancelling any in-flight speculation), the continuation
+        # returns after the think time
+        arrivals = ((parent, 10.0), (bystander, 25.0), (child, 300.0))
+        reqs = [Request(rid=i, arrival=t, prompt_len=s.n_tokens + 1_000,
+                        reuse_tokens=s.n_tokens, prefix=s.key,
+                        max_new_tokens=4)
+                for i, (s, t) in enumerate(arrivals)]
+        sim = ServingSimulator(CFG, kvfetcher_spec(RATIOS), chip="h20",
+                               n_chips=2,
+                               bandwidth=BandwidthTrace.constant(2.0),
+                               storage=cluster, table=H20_TABLE,
+                               prefetch=pf)
+        sim.run(reqs, max_new_tokens=4)
+        return reqs, pf
+
+    warm_reqs, pf = run_case(with_prefetch=True)
+    cold_reqs, _ = run_case(with_prefetch=False)
+    warm, cold = warm_reqs[2], cold_reqs[2]
+    by_on, by_off = warm_reqs[1], cold_reqs[1]
+
+    assert warm.storage_hit == "host", \
+        f"continuation not served from host tier ({warm.storage_hit})"
+    assert cold.storage_hit == "full"
+    assert warm.ttft < cold.ttft, \
+        (f"warm host hit must strictly beat the reactive fetch "
+         f"({warm.ttft:.2f}s vs {cold.ttft:.2f}s)")
+    assert by_on.ttft <= 1.05 * by_off.ttft, \
+        (f"un-predicted bystander regressed {by_on.ttft / by_off.ttft:.3f}x "
+         f"with prefetch enabled (speculation must yield the link)")
+    assert pf.host_hits == 1 and pf.prefetches_committed >= 1
+
+    rows: List[Row] = [
+        ("ttft.prefetch.warm_hit", warm.ttft * 1e6, warm.ttft),
+        ("ttft.prefetch.reactive", cold.ttft * 1e6, cold.ttft),
+        ("ttft.prefetch.bystander_with_prefetch", by_on.ttft * 1e6,
+         by_on.ttft),
+        ("ttft.prefetch.bystander_reactive", by_off.ttft * 1e6,
+         by_off.ttft),
+        ("ttft.prefetch.cancelled", 0.0, float(pf.prefetches_cancelled)),
+        ("ttft.prefetch.wasted_mb", 0.0, pf.wasted_bytes / 1e6),
+        # gated ratios (tools/check_bench.py): higher is better
+        ("ttft.prefetch.speedup_warm_vs_reactive", 0.0,
+         cold.ttft / warm.ttft),
+        ("ttft.prefetch.retained_bystander", 0.0,
+         by_off.ttft / by_on.ttft),
+    ]
+    return rows
+
+
 def _storage_live_rows() -> List[Row]:
     """Real engine against a 2-node StorageCluster: only the 64-token
     ancestor of the 96-token ask is registered, so the lookup is a
@@ -510,6 +597,7 @@ def run() -> List[Row]:
     rows.extend(_wan_adaptive_rows())
     rows.extend(_storage_rows())
     rows.extend(_storage_failover_rows())
+    rows.extend(_prefetch_rows())
     rows.extend(_live_rows())
     rows.extend(_wan_live_rows())
     rows.extend(_storage_live_rows())

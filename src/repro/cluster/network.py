@@ -417,6 +417,11 @@ class SharedLink:
         self.ramp_init = ramp_init
         self.ramp_interval = ramp_interval
         self._ramp: Dict[int, float] = {}  # flow -> share factor (<= 1)
+        # per-open generation token: flow ids are reused (retransmit /
+        # heal / prefetch flows close and reopen under the same id), and
+        # a ramp epoch scheduled by a previous open must not advance the
+        # ramp of a later one
+        self._ramp_gen: Dict[int, int] = {}
         self._push: Optional[Callable[[float, Callable], None]] = None
         self._weights: Dict[int, float] = {}
         # fair-mode state: fluid frontier + in-flight transfers
@@ -448,6 +453,11 @@ class SharedLink:
         queue); without ``t`` (or in ``instant`` mode) it joins at full
         share."""
         self._weights[flow] = float(weight)
+        # every open (including a reopen of a reused flow id) starts a
+        # fresh ramp generation; epochs scheduled by prior opens of the
+        # same id become stale and are dropped in _ramp_epoch
+        gen = self._ramp_gen.get(flow, 0) + 1
+        self._ramp_gen[flow] = gen
         if flow not in self._order:
             self._order.append(flow)
             self._deficit.setdefault(flow, 0.0)
@@ -455,12 +465,14 @@ class SharedLink:
                 and self._push is not None:
             self._ramp[flow] = self.ramp_init
             self._push(t + self.ramp_interval,
-                       lambda tt, fl=flow: self._ramp_epoch(fl, tt))
+                       lambda tt, fl=flow, g=gen: self._ramp_epoch(fl, tt, g))
         else:
             self._ramp.pop(flow, None)
 
-    def _ramp_epoch(self, flow: int, t: float) -> None:
+    def _ramp_epoch(self, flow: int, t: float, gen: int) -> None:
         """One slow-start doubling; re-times in-flight transfers."""
+        if gen != self._ramp_gen.get(flow):
+            return  # stale epoch from a previous open of this flow id
         cur = self._ramp.get(flow)
         if cur is None or flow not in self._weights:
             return  # flow finished ramping or already closed
@@ -472,7 +484,7 @@ class SharedLink:
         else:
             self._ramp[flow] = nxt
             self._push(t + self.ramp_interval,
-                       lambda tt, fl=flow: self._ramp_epoch(fl, tt))
+                       lambda tt, fl=flow, g=gen: self._ramp_epoch(fl, tt, g))
         if self.policy == "fair":
             self._reschedule()
 
@@ -672,6 +684,14 @@ class SharedLink:
         concurrency — used to seed projected service times before the
         first goodput sample lands)."""
         return len(self._weights)
+
+    def demand_flows(self) -> int:
+        """Open flows with non-negative ids.  Background transfers
+        (storage heals, speculative prefetches) use negative flow ids by
+        repo convention, so this counts the demand fetches currently on
+        the link — the prefetcher defers new speculation while it is
+        non-zero."""
+        return sum(1 for fl in self._weights if fl >= 0)
 
     def ramp_factor(self, flow: int) -> float:
         """Current slow-start factor of ``flow`` (1.0 once fully ramped

@@ -203,6 +203,9 @@ class ServingSimulator:
                  link_policy: Optional[str] = None,  # None -> "fair"
                  link_ramp: Optional[str] = None,  # None -> "instant"
                  storage: Optional[StorageCluster] = None,
+                 # speculative prefetch + host staging tier: a
+                 # repro.cluster.staging.PrefetchManager over `storage`
+                 prefetch=None,
                  # scripted storage-node churn: fail_at=[(t, node_id)]
                  # kills nodes mid-run, recover_at brings them back
                  fail_at: Optional[List[Tuple[float, str]]] = None,
@@ -252,7 +255,7 @@ class ServingSimulator:
                 resolutions=RESOLUTIONS,
                 rto_mode=method.rto_mode,
                 max_attempts=method.max_attempts),
-            hooks=_SimHooks(self))
+            hooks=_SimHooks(self), prefetcher=prefetch)
         # scripted node churn, merged and time-ordered; heal transfers
         # (heal="link") schedule their completions on the controller's
         # event queue so they contend with live fetches
@@ -263,6 +266,13 @@ class ServingSimulator:
             + [(t, "recover", nid) for t, nid in (recover_at or [])])
         if storage is not None:
             storage.bind(self.ctrl.push_event)
+            # completed fetches report their flow's smoothed RTT keyed
+            # by serving node — drives RTT-aware replica/heal selection
+            self.ctrl.rtt_sink = storage.observe_rtt
+        self.prefetch = prefetch
+        if prefetch is not None:
+            assert storage is not None, "prefetch= needs a storage cluster"
+            prefetch.bind(self.ctrl.push_event)
         # per-request engine progress
         self.prefill_remaining: Dict[int, int] = {}
         self.context_done: Dict[int, int] = {}
@@ -294,8 +304,22 @@ class ServingSimulator:
         if self.storage is None:
             self.ctrl.start(req, self._build_plan(req), now)
             return False
+        if self.prefetch is not None:
+            staged = self.prefetch.host_lookup(req.prefix,
+                                               req.reuse_tokens, now)
+            if staged is not None:
+                # host-first: a staged full hit rides the staging
+                # tier's h2d link — the WAN is off the TTFT path
+                req.storage_hit = "host"
+                req.storage_node = "host"
+                self.prefetch.observe(req.prefix, now)
+                self.ctrl.start(req, self._build_plan(req), now,
+                                link=self.prefetch.staging.link)
+                return False
         hit = self.storage.lookup(req.prefix, now,
                                   requested_tokens=req.reuse_tokens)
+        if self.prefetch is not None:
+            self.prefetch.observe(req.prefix, now)
         req.storage_hit = hit.kind
         if hit.kind == "miss":
             req.storage_miss_key = hit.missed_key
@@ -345,6 +369,10 @@ class ServingSimulator:
             missed = False
             for req in self.sched.take_fetches():
                 missed |= self._dispatch_fetch(req, now)
+            if self.prefetch is not None:
+                # sglang-style tick: launch speculation for heated
+                # prefixes (deferred while demand holds the link)
+                self.prefetch.tick(now)
             if missed:
                 # miss fallbacks re-entered the waiting queue with
                 # reuse_tokens=0; admit them now (their full-prompt

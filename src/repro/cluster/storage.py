@@ -467,12 +467,38 @@ class StorageCluster:
     spends; a score of 0 would admit everything).  Heals bypass
     admission (they restore residency the controller already granted).
 
+    Recovery re-balance
+    ------------------
+    :meth:`recover_node` does not leave the recovered node empty: keys
+    whose preferred replica set (first ``replication`` ring nodes) now
+    includes it, but whose copies sit on later ring successors, are
+    streamed back through the heal machinery (``rebalance`` events) and
+    the surplus successor copies are trimmed (``rebalance_drop``) —
+    otherwise primary lookups pay the successor hop forever and
+    occupancy stays skewed on the ring (ISSUE 6 bugfix).
+
+    RTT-aware source selection
+    --------------------------
+    The fetch controller reports each completed fetch's smoothed RTT
+    via :meth:`observe_rtt`; replica picks and heal sources then avoid
+    nodes whose observed RTT is more than ``RTT_SLACK`` above the best
+    known node.  Nodes within the slack band (and nodes with no samples
+    yet) stay in the legacy round-robin rotation, so behaviour — and
+    the event log's determinism as a pure function of the access
+    sequence — is unchanged until the RTT signal actually diverges.
+
     Every decision is appended to :attr:`events` as ``(kind, key,
     node_id)`` tuples — ``admit``/``evict``/``hit``/``partial``/
     ``miss``/``replicate``/``reject``/``fail``/``heal``/``recover``/
-    ``expire`` — deterministically for a given access sequence and
-    churn schedule.
+    ``rebalance``/``rebalance_drop``/``expire`` — deterministically for
+    a given access sequence and churn schedule.
     """
+
+    #: EWMA gain for per-node smoothed-RTT observations.
+    RTT_GAIN = 0.3
+    #: relative band around the best known node RTT inside which
+    #: replicas are considered equivalent and rotation applies
+    RTT_SLACK = 0.25
 
     def __init__(self, nodes: Sequence[StorageNode], *,
                  placement: str = "hash", replicate_threshold: int = 3,
@@ -508,9 +534,16 @@ class StorageCluster:
         self.partial_hits = 0
         self.misses = 0
         self.heals_completed = 0
+        self.rebalances_completed = 0
+        # per-node smoothed RTT, fed by the fetch controller from each
+        # completed fetch's RttEstimator (ISSUE 6: replica/heal-source
+        # selection avoids the most-contended node)
+        self.node_rtt: Dict[str, float] = {}
         # heal="manual": tasks wait here for pump_heal() (wall-clock
-        # engines have no virtual event queue to schedule them on)
-        self.heal_queue: List[Tuple[StoredPrefix, Optional[str], str]] = []
+        # engines have no virtual event queue to schedule them on);
+        # entries are (entry, source_id, target_id, kind)
+        self.heal_queue: List[
+            Tuple[StoredPrefix, Optional[str], str, str]] = []
         # delayed write-on-miss: keys whose recompute is outstanding
         self._pending_recompute: Set[str] = set()
         # external event-queue hook (heal="link"): push(t, fn)
@@ -649,14 +682,52 @@ class StorageCluster:
             out.append(n)
         return out
 
+    def observe_rtt(self, node_id: str, srtt: float) -> None:
+        """Fold one completed fetch's smoothed RTT into ``node_id``'s
+        EWMA (fed by ``FetchController`` via its ``rtt_sink`` hook).
+        The per-flow `RttEstimator` already smooths within a fetch;
+        this smooths across fetches so one contended transfer does not
+        blacklist a node forever."""
+        if node_id not in self.by_id or srtt is None:
+            return
+        prev = self.node_rtt.get(node_id)
+        self.node_rtt[node_id] = (srtt if prev is None else
+                                  prev + self.RTT_GAIN * (srtt - prev))
+
+    def _rtt_candidates(self,
+                        nodes: List[StorageNode]) -> List[StorageNode]:
+        """Drop nodes whose observed RTT sits more than ``RTT_SLACK``
+        above the best known node; unsampled nodes are kept (optimistic
+        — they must be explored before they can be judged)."""
+        rtts = [self.node_rtt.get(n.node_id) for n in nodes]
+        known = [r for r in rtts if r is not None]
+        if not known:
+            return nodes
+        best = min(known)
+        return [n for n, r in zip(nodes, rtts)
+                if r is None or r <= best * (1.0 + self.RTT_SLACK)]
+
     def _pick_replica(self, key: str,
                       nodes: List[StorageNode]) -> StorageNode:
         """Rotate across resident replicas by this key's lookup count —
         spreads concurrent fetches over the replicas' links while
         staying a pure function of the access sequence (unlike e.g.
         least-in-flight, which would make the event log clock-dependent
-        and break cross-environment determinism)."""
-        return nodes[self.hits_by_key.get(key, 0) % len(nodes)]
+        and break cross-environment determinism).  Replicas whose
+        observed RTT has drifted ``RTT_SLACK`` above the best node are
+        excluded from the rotation (ISSUE 6: fetches stop piling onto
+        the most-contended replica); with no or uniform RTT data this
+        degenerates to the legacy rotation."""
+        cand = self._rtt_candidates(nodes)
+        return cand[self.hits_by_key.get(key, 0) % len(cand)]
+
+    def _pick_heal_source(self,
+                          nodes: List[StorageNode]) -> StorageNode:
+        """Heal/re-balance source: the lowest observed-RTT holder, ring
+        order breaking ties; a node with no samples scores as best
+        (legacy ``survivors[0]`` behaviour until data says otherwise)."""
+        return min(nodes,
+                   key=lambda n: self.node_rtt.get(n.node_id, 0.0))
 
     def _longest_cataloged(self, token_ids: np.ndarray, *,
                            below: int) -> Optional[StoredPrefix]:
@@ -825,23 +896,63 @@ class StorageCluster:
             need = self.replication - len(survivors)
             targets = [n for n in self._ring_nodes(key)
                        if not n.contains(key)][:max(need, 0)]
-            source = survivors[0] if survivors else None
+            source = (self._pick_heal_source(survivors) if survivors
+                      else None)
             for target in targets:
                 self._start_heal(entry, source, target, now)
         return lost
 
     def recover_node(self, node_id: str, now: float) -> None:
-        """Bring a failed node back (empty): it rejoins the ring and
-        repopulates organically via placement, replication, and
-        write-on-miss."""
+        """Bring a failed node back (empty): it rejoins the ring, and
+        keys it is now a preferred replica for are proactively streamed
+        back from their current holders (``rebalance`` events) — without
+        this, keys registered during the outage stay on ring successors
+        and every primary lookup pays the successor hop forever."""
         node = self.by_id[node_id]
         assert not node.alive, f"{node_id} is not failed"
         node.recover()
         self.events.append(("recover", "", node_id))
+        self._rebalance_onto(node, now)
+
+    def _rebalance_onto(self, node: StorageNode, now: float) -> None:
+        """Proactive key re-balance after recovery: every cataloged key
+        whose first ``replication`` ring nodes include ``node`` but
+        which is resident only on later successors is copied back over
+        the heal machinery (same transports/weights); once the copy
+        lands, surplus copies beyond the replication factor are trimmed
+        from non-preferred holders, de-skewing occupancy.  Catalog
+        insertion order keeps the event log a pure function of the
+        access/churn sequence."""
+        for key, entry in self.catalog.items():
+            if node not in self._ring_nodes(key)[:self.replication]:
+                continue
+            if node.contains(key):
+                continue
+            holders = self._resident_nodes(key, now)
+            if not holders:
+                continue  # nothing resident: write-on-miss path owns it
+            source = self._pick_heal_source(holders)
+            self._start_heal(entry, source, node, now, kind="rebalance")
+
+    def _trim_surplus(self, key: str, now: float) -> None:
+        """Drop copies beyond the replication factor from non-preferred
+        holders (reverse ring order), keeping preferred copies."""
+        preferred = {n.node_id
+                     for n in self._ring_nodes(key)[:self.replication]}
+        holders = self._resident_nodes(key, now)
+        for n in reversed(holders):
+            if len(holders) <= self.replication:
+                return
+            if n.node_id in preferred:
+                continue
+            n._remove(key)
+            holders.remove(n)
+            self.events.append(("rebalance_drop", key, n.node_id))
 
     def _start_heal(self, entry: StoredPrefix,
                     source: Optional[StorageNode],
-                    target: StorageNode, now: float) -> None:
+                    target: StorageNode, now: float, *,
+                    kind: str = "heal") -> None:
         """One re-replication transfer.  The wire path is the source
         node's own link (the durable catalog re-seeds over the target's
         link — the donor uploads into the target); a heal flow joins at
@@ -852,11 +963,11 @@ class StorageCluster:
         if self.heal == "manual":
             self.heal_queue.append(
                 (entry, source.node_id if source else None,
-                 target.node_id))
+                 target.node_id, kind))
             return
         link = source.link if source is not None else target.link
         if self.heal == "sync" or link is None:
-            self._finish_heal(entry, target, now)
+            self._finish_heal(entry, target, now, kind=kind)
             return
         assert self._push is not None, \
             "heal='link' needs bind() — pass the cluster to a " \
@@ -869,9 +980,9 @@ class StorageCluster:
         link.open_flow(flow, weight=self.heal_weight, t=now)
 
         def done(t: float, entry=entry, target=target, link=link,
-                 flow=flow) -> None:
+                 flow=flow, kind=kind) -> None:
             link.close_flow(flow)
-            self._finish_heal(entry, target, t)
+            self._finish_heal(entry, target, t, kind=kind)
 
         link.submit(flow, entry.stored_bytes, now, done)
 
@@ -881,19 +992,24 @@ class StorageCluster:
         staging recovery in wall-clock environments and tests."""
         tasks, self.heal_queue = self.heal_queue, []
         n = 0
-        for entry, _, target_id in tasks:
+        for entry, _, target_id, kind in tasks:
             target = self.by_id[target_id]
-            before = self.heals_completed
-            self._finish_heal(entry, target, now)
-            n += self.heals_completed - before
+            before = self.heals_completed + self.rebalances_completed
+            self._finish_heal(entry, target, now, kind=kind)
+            n += (self.heals_completed + self.rebalances_completed
+                  - before)
         return n
 
     def _finish_heal(self, entry: StoredPrefix, target: StorageNode,
-                     now: float) -> None:
+                     now: float, *, kind: str = "heal") -> None:
         if not target.alive or target.contains(entry.key):
             return  # target churned away / copy arrived by another path
-        if self._place(entry, target, now, kind="heal"):
-            self.heals_completed += 1  # rejected heals are not completions
+        if self._place(entry, target, now, kind=kind):
+            if kind == "rebalance":
+                self.rebalances_completed += 1
+                self._trim_surplus(entry.key, now)
+            else:
+                self.heals_completed += 1  # rejected: not a completion
 
     # -- stats --------------------------------------------------------------
     def hit_rate(self) -> float:

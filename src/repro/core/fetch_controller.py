@@ -197,7 +197,8 @@ class FetchController:
                  table: Optional[DecodeTable] = None,
                  pool=None,
                  config: Optional[PipelineConfig] = None,
-                 hooks: Optional[FetchHooks] = None):
+                 hooks: Optional[FetchHooks] = None,
+                 prefetcher=None):
         self.sched = sched
         self.link = make_link(bandwidth)
         self.link.bind(self._push)
@@ -208,6 +209,13 @@ class FetchController:
         self.pool = pool
         self.config = config or PipelineConfig()
         self.hooks = hooks or FetchHooks()
+        # speculative prefetch (repro.cluster.staging.PrefetchManager):
+        # demand fetches starting on a link cancel speculation riding it
+        self.prefetcher = prefetcher
+        # per-node smoothed-RTT sink (StorageCluster.observe_rtt): each
+        # completed fetch reports its flow's RTT estimate keyed by the
+        # serving storage node, driving RTT-aware replica selection
+        self.rtt_sink: Optional[Callable[[str, float], None]] = None
         self.active: Dict[int, ActiveFetch] = {}
         self.now = 0.0
         self.buffer_high_water = 0.0
@@ -277,6 +285,11 @@ class FetchController:
         req.fetch_started = now
         lnk = self.link if link is None else make_link(link)
         lnk.bind(self._push)
+        if self.prefetcher is not None:
+            # demand traffic needs this link: in-flight speculation on
+            # it is cancelled before the flow opens (host-tier fetches
+            # cancel nothing — they ride the staging link)
+            self.prefetcher.demand_started(req, lnk, now)
         f = ActiveFetch(req, plan, BandwidthEstimator(lnk.bw_at(now)),
                         trans_free_at=now, link=lnk)
         self.active[req.rid] = f
@@ -600,6 +613,9 @@ class FetchController:
         f.req.layers_ready = f.plan.layers_ready()
         self.active.pop(f.req.rid, None)
         f.link.close_flow(f.req.rid)
+        if self.rtt_sink is not None and f.rtt.srtt is not None \
+                and f.req.storage_node:
+            self.rtt_sink(f.req.storage_node, f.rtt.srtt)
         self.sched.notify_fetch_done(f.req, now)
 
     # -- Appx A.3 layer-wise early admission --------------------------------

@@ -117,6 +117,46 @@ def zipf_prefix_trace(rng: np.random.Generator,
     return out
 
 
+def session_trace(rng: np.random.Generator,
+                  specs: Sequence[PrefixSpec], *,
+                  n_sessions: int = 4, continue_p: float = 0.9,
+                  session_gap: float = 60.0, think_time: float = 120.0,
+                  suffix_tokens: int = 1_000,
+                  max_new_tokens: int = 32) -> List[Request]:
+    """Session-continuation requests over the prefix trie: each session
+    opens at a (uniformly drawn) trie root and, with probability
+    ``continue_p`` per turn, comes back after ``think_time`` seconds
+    asking for a *child* of the prefix it just reused — the multi-turn
+    shape whose next ask extends the previous one, which is exactly the
+    signal the prefetch predictor's session-continuation term exploits
+    (a hit on P heats P's children; docs/prefetch.md).  Sessions open
+    ``session_gap`` apart in expectation.  Deterministic for a given
+    rng; requests are returned in arrival order with dense rids."""
+    children: dict = {}
+    for s in specs:
+        children.setdefault(s.parent, []).append(s)
+    roots = children.get(None, [])
+    assert roots, "specs contain no trie roots"
+    raw: List[tuple] = []
+    t = 0.0
+    for _ in range(n_sessions):
+        t += rng.exponential(session_gap)
+        spec, ta = roots[int(rng.integers(len(roots)))], t
+        while True:
+            raw.append((ta, spec))
+            kids = children.get(spec.key, [])
+            if not kids or rng.random() >= continue_p:
+                break
+            spec = kids[int(rng.integers(len(kids)))]
+            ta += rng.exponential(think_time)
+    raw.sort(key=lambda p: p[0])
+    return [Request(rid=rid, arrival=ta,
+                    prompt_len=spec.n_tokens + suffix_tokens,
+                    reuse_tokens=spec.n_tokens, prefix=spec.key,
+                    max_new_tokens=max_new_tokens)
+            for rid, (ta, spec) in enumerate(raw)]
+
+
 def churn_schedule(rng: np.random.Generator,
                    node_ids: Sequence[str], *,
                    n_failures: int = 1, t_start: float = 100.0,

@@ -118,11 +118,18 @@ class LiveEngine:
                  rto_mode: str = "adaptive",  # or "fixed" (baseline)
                  use_table_sizes: bool = False,  # model Appx A.2 sizes
                  decode_table: Optional[DecodeTable] = None,
-                 cost: Optional[EngineCostModel] = None):
+                 cost: Optional[EngineCostModel] = None,
+                 # speculative prefetch + host staging tier: a
+                 # repro.cluster.staging.PrefetchManager over `store`
+                 prefetch=None):
         assert fetch_mode in ("sync", "async")
         self.params = params
         self.cfg = cfg
         self.store = store
+        self.prefetch = prefetch
+        if prefetch is not None:
+            assert isinstance(store, StorageCluster), \
+                "prefetch= needs a multi-node StorageCluster store"
         self.cache = PagedKVCache(cfg, n_pages, page_size)
         self.sched = FetchingAwareScheduler(policy, max_running=max_running)
         self.resolution = resolution
@@ -168,11 +175,18 @@ class LiveEngine:
                                          and policy == "kvfetcher"),
                     use_table_sizes=use_table_sizes,
                     rto_mode=rto_mode),
-                hooks=_EngineHooks(self))
+                hooks=_EngineHooks(self), prefetcher=prefetch)
             if isinstance(store, StorageCluster):
                 # heal="link" re-replication transfers share the
                 # controller's virtual clock + the nodes' links
                 store.bind(self.ctrl.push_event)
+                self.ctrl.rtt_sink = store.observe_rtt
+            if prefetch is not None:
+                prefetch.bind(self.ctrl.push_event)
+        elif prefetch is not None:
+            # wall clock has no event queue to stream speculation on
+            assert prefetch.transport == "sync", \
+                "wall-clock engines need PrefetchManager(transport='sync')"
 
     # -- time: virtual clock in modeled-network mode, else wall clock -------
     def now(self) -> float:
@@ -217,19 +231,36 @@ class LiveEngine:
         link = None
         if isinstance(self.store, StorageCluster):
             tokens = self.prompts[req.rid][:req.reuse_tokens]
-            hit = self.store.lookup_tokens(tokens, self.now())
-            req.storage_hit = hit.kind
-            if hit.kind == "miss":
-                req.storage_miss_key = hit.missed_key
-                self.sched.notify_fetch_miss(req, self.now())
-                return
-            req.storage_node = hit.node.node_id
-            if hit.kind == "partial":
-                req.requested_reuse_tokens = req.reuse_tokens
-                req.reuse_tokens = hit.covered_tokens
-                req.prefix = hit.entry.key  # fetch the ancestor
-            man = hit.entry.manifest
-            link = hit.node.link
+            staged = (self.prefetch.host_lookup_tokens(tokens, self.now())
+                      if self.prefetch is not None else None)
+            if staged is not None:
+                # host-first: the speculatively staged copy serves from
+                # host DRAM over the staging tier's h2d link — the WAN
+                # is off this request's TTFT path entirely
+                req.storage_hit = "host"
+                req.storage_node = "host"
+                req.prefix = staged.key
+                self.prefetch.observe(staged.key, self.now())
+                man = staged.manifest
+                link = self.prefetch.staging.link
+            else:
+                hit = self.store.lookup_tokens(tokens, self.now())
+                if self.prefetch is not None:
+                    self.prefetch.observe(
+                        hit.entry.key if hit.entry is not None
+                        else hit.missed_key, self.now())
+                req.storage_hit = hit.kind
+                if hit.kind == "miss":
+                    req.storage_miss_key = hit.missed_key
+                    self.sched.notify_fetch_miss(req, self.now())
+                    return
+                req.storage_node = hit.node.node_id
+                if hit.kind == "partial":
+                    req.requested_reuse_tokens = req.reuse_tokens
+                    req.reuse_tokens = hit.covered_tokens
+                    req.prefix = hit.entry.key  # fetch the ancestor
+                man = hit.entry.manifest
+                link = hit.node.link
         else:
             man = self.store.lookup(req.prefix)
         assert man is not None, f"prefix {req.prefix} not registered"
@@ -379,6 +410,10 @@ class LiveEngine:
         for req in self.sched.take_fetches():
             self._start_fetch(req)
             self.sched.schedule(self.now())
+        if self.prefetch is not None:
+            # sglang-style tick: launch speculation for heated prefixes
+            # (deferred while demand fetches hold the source link)
+            self.prefetch.tick(self.now())
         # newly admitted requests need prefill
         for req in list(self.sched.running):
             if req.t_first_token is None:

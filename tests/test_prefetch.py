@@ -1,0 +1,392 @@
+"""Speculative prefix prefetch + host staging tier (ISSUE 6 surface).
+
+Unit tests cover the trie predictor (popularity + session-continuation
+heat), mispredict-budget enforcement (``budget_reject``; earned entries
+evict free), speculative-flow cancellation under demand pressure
+(byte-accurate waste accounting, heal-weight contract), and host-tier
+eviction under capacity.  Integration tests drive the analytic
+simulator over a session-continuation trace (warm hits resolve from
+host DRAM) and replay a prefetch-then-hit trace through the simulator
+AND the real live engine, asserting the cluster and prefetcher event
+sequences agree.
+"""
+import heapq
+
+import numpy as np
+import pytest
+
+from repro.cluster.network import HEAL_WEIGHT, BandwidthTrace, SharedLink
+from repro.cluster.storage import StorageCluster, StorageNode, StoredPrefix
+from repro.cluster.staging import (PCIE_H2D_GBPS, PREFETCH_WEIGHT,
+                                   HostStagingTier, PrefetchManager)
+from repro.core.scheduler import Request
+from repro.data.workload import prefix_trie_specs, session_trace
+
+MB = 1_000_000
+
+
+def _entry(key, n_tokens=1000, size=10 * MB, parent=None):
+    return StoredPrefix(key=key, n_tokens=n_tokens,
+                        bytes_by_resolution={"240p": size},
+                        raw_kv_bytes=8 * size, parent=parent)
+
+
+def _cluster(entries, *, gbps=None, **kw):
+    link = None if gbps is None else BandwidthTrace.constant(gbps)
+    cluster = StorageCluster([StorageNode("n0", link=link)], **kw)
+    for e in entries:
+        cluster.register(e, 0.0)
+    return cluster
+
+
+def _queue():
+    """A minimal virtual event queue (heap) shaped like the fetch
+    controller's ``push_event``; returns (push, pump)."""
+    ev, seq = [], iter(range(1 << 20))
+
+    def push(t, fn):
+        heapq.heappush(ev, (t, next(seq), fn))
+
+    def pump(until):
+        while ev and ev[0][0] <= until:
+            t, _, fn = heapq.heappop(ev)
+            fn(t)
+
+    return push, pump
+
+
+# ---------------------------------------------------------------------------
+# predictor
+# ---------------------------------------------------------------------------
+
+def test_predictor_heats_children_on_parent_hit():
+    """Session-continuation term: one demand hit on P pushes P's
+    cataloged children over the threshold before P itself."""
+    parent, child = _entry("p"), _entry("p.c", parent="p")
+    pf = PrefetchManager(_cluster([parent, child]),
+                         HostStagingTier(None), transport="sync")
+    assert pf.predictions() == []
+    pf.observe("p", 0.0)
+    assert pf.heat["p"] == 1.0
+    assert pf.heat["p.c"] == pf.continuation_boost
+    assert pf.predictions() == ["p.c"]  # child hot, parent not yet
+    pf.observe("p", 1.0)
+    assert set(pf.predictions()) == {"p", "p.c"}
+    assert pf.predictions()[0] == "p.c"  # hottest first
+
+
+def test_predictions_skip_staged_and_unknown_keys():
+    parent, child = _entry("p"), _entry("p.c", parent="p")
+    pf = PrefetchManager(_cluster([parent, child]),
+                         HostStagingTier(None), transport="sync")
+    pf.observe("nonexistent", 0.0)  # heats nothing cataloged
+    assert pf.predictions() == []
+    pf.observe("p", 0.0)
+    assert pf.tick(0.0) is None
+    assert pf.staging.contains("p.c")
+    assert pf.predictions() == []  # staged keys leave the candidate set
+    assert pf.events == [("prefetch_start", "p.c"),
+                         ("prefetch_done", "p.c")]
+
+
+# ---------------------------------------------------------------------------
+# mispredict budget
+# ---------------------------------------------------------------------------
+
+def test_mispredict_budget_blocks_new_speculation():
+    """Unearned evictions charge the budget; once exhausted, new
+    speculation is declined with ``budget_reject``."""
+    entries = [_entry(k, size=10 * MB) for k in ("a", "b", "c", "d")]
+    cluster = _cluster(entries)
+    pf = PrefetchManager(cluster, HostStagingTier(10 * MB),
+                         transport="sync",
+                         mispredict_budget_bytes=15 * MB)
+    assert pf.request_prefetch("a", 0.0)   # staged, waste 0
+    assert pf.request_prefetch("b", 1.0)   # evicts a: waste 10 MB < 15
+    assert pf.wasted_bytes == 10 * MB
+    assert ("stage_evict", "a") in pf.events
+    assert pf.request_prefetch("c", 2.0)   # evicts b: waste 20 MB >= 15
+    assert pf.wasted_bytes == 20 * MB
+    assert not pf.request_prefetch("d", 3.0)
+    assert pf.events[-1] == ("budget_reject", "d")
+    assert not pf.staging.contains("d")
+
+
+def test_earned_entries_evict_free():
+    """An entry that served a host hit is earned: its eviction charges
+    nothing, so good predictions never exhaust the budget."""
+    entries = [_entry(k, size=10 * MB) for k in ("a", "b", "c")]
+    cluster = _cluster(entries)
+    pf = PrefetchManager(cluster, HostStagingTier(10 * MB),
+                         transport="sync",
+                         mispredict_budget_bytes=5 * MB)
+    assert pf.request_prefetch("a", 0.0)
+    hit = pf.host_lookup("a", entries[0].n_tokens, 1.0)
+    assert hit is not None and hit.key == "a"
+    assert pf.host_hits == 1 and ("host_hit", "a") in pf.events
+    assert pf.request_prefetch("b", 2.0)   # evicts earned a: free
+    assert pf.wasted_bytes == 0.0
+    assert ("stage_evict", "a") in pf.events
+    # b never serves: its eviction exhausts the 5 MB budget
+    assert pf.request_prefetch("c", 3.0)
+    assert pf.wasted_bytes == 10 * MB
+    assert not pf.request_prefetch("a", 4.0)
+    assert pf.events[-1] == ("budget_reject", "a")
+
+
+def test_host_lookup_requires_full_coverage():
+    pf = PrefetchManager(_cluster([_entry("a", n_tokens=1000)]),
+                         HostStagingTier(None), transport="sync")
+    assert pf.request_prefetch("a", 0.0)
+    assert pf.host_lookup("a", 2000, 1.0) is None  # staged < asked
+    assert pf.host_lookup("missing", 10, 1.0) is None
+    assert pf.host_hits == 0 and "a" not in pf._earned
+    assert pf.host_lookup("a", 1000, 2.0) is not None
+
+
+# ---------------------------------------------------------------------------
+# link transport: weight contract, deferral, cancellation
+# ---------------------------------------------------------------------------
+
+def test_speculation_defers_while_demand_holds_the_link():
+    """request_prefetch declines (without burning budget or logging
+    noise) while any non-negative demand flow is open on the source."""
+    cluster = _cluster([_entry("a")], gbps=0.008)
+    push, pump = _queue()
+    pf = PrefetchManager(cluster, HostStagingTier(None), transport="link")
+    pf.bind(push)
+    link = cluster.nodes[0].link
+    link.bind(push)
+    link.open_flow(7, t=0.0)  # a demand fetch (rid >= 0)
+    assert not pf.request_prefetch("a", 0.0)
+    assert pf.events == [] and pf.prefetches_started == 0
+    link.close_flow(7)
+    assert pf.request_prefetch("a", 1.0)
+    assert pf.events == [("prefetch_start", "a")]
+
+
+def test_demand_pressure_cancels_inflight_speculation():
+    """A demand fetch arriving mid-speculation cancels the speculative
+    flow; bytes already on the wire are charged byte-accurately, the
+    flow closes, and the staging tier stays cold."""
+    # 0.008 Gbps = 1 MB/s; the sole 10 MB speculation takes 10 s
+    cluster = _cluster([_entry("a", size=10 * MB)], gbps=0.008)
+    push, pump = _queue()
+    pf = PrefetchManager(cluster, HostStagingTier(None), transport="link")
+    pf.bind(push)
+    assert pf.request_prefetch("a", 0.0)
+    spec = pf._inflight["a"]
+    link = cluster.nodes[0].link
+    # weight contract: speculation joins at the heal weight, under a
+    # far-negative flow id that cannot collide with rids or heal flows
+    assert PREFETCH_WEIGHT == HEAL_WEIGHT
+    assert link._weights[spec.flow] == PREFETCH_WEIGHT
+    assert spec.flow < -999_999
+    pump(4.0)  # nothing due yet: completion would land at t=10
+    req = Request(rid=0, arrival=4.0, prompt_len=1000, reuse_tokens=0)
+    pf.demand_started(req, link, 4.0)
+    assert pf.events == [("prefetch_start", "a"), ("prefetch_cancel", "a")]
+    assert pf.prefetches_cancelled == 1 and pf._inflight == {}
+    assert pf.wasted_bytes == pytest.approx(4 * MB)  # 4 s at 1 MB/s
+    assert spec.flow not in link._weights  # flow closed
+    assert not pf.staging.contains("a")
+    pump(20.0)  # the dead completion callback must not commit anything
+    assert pf.prefetches_committed == 0
+    assert not pf.staging.contains("a")
+
+
+def test_demand_on_other_links_cancels_nothing():
+    """Only the contended link's speculation is cancelled: demand on a
+    different node's link — or resolved from the host tier itself —
+    leaves speculation running."""
+    cluster = _cluster([_entry("a", size=10 * MB)], gbps=0.008)
+    push, pump = _queue()
+    pf = PrefetchManager(cluster, HostStagingTier(None), transport="link")
+    pf.bind(push)
+    assert pf.request_prefetch("a", 0.0)
+    other = SharedLink(BandwidthTrace.constant(1.0))
+    req = Request(rid=0, arrival=1.0, prompt_len=1000, reuse_tokens=0)
+    pf.demand_started(req, other, 1.0)        # different link
+    pf.demand_started(req, pf.staging.link, 1.0)  # host-resolved fetch
+    assert pf.prefetches_cancelled == 0 and "a" in pf._inflight
+    pump(10.0)
+    assert pf.staging.contains("a") and pf.prefetches_committed == 1
+
+
+# ---------------------------------------------------------------------------
+# host tier eviction
+# ---------------------------------------------------------------------------
+
+def test_host_tier_evicts_under_capacity_pressure():
+    """The staging tier is a real capacity-bounded StorageNode: filling
+    it evicts deterministically (LRU) with ``stage_evict`` events, and
+    occupancy never exceeds capacity."""
+    entries = [_entry(k, size=10 * MB) for k in ("a", "b", "c")]
+    cluster = _cluster(entries)
+    staging = HostStagingTier(20 * MB)
+    pf = PrefetchManager(cluster, staging, transport="sync")
+    for t, k in enumerate(("a", "b")):
+        assert pf.request_prefetch(k, float(t))
+    assert staging.used_bytes == 20 * MB
+    pf.host_lookup("a", 1000, 5.0)  # refresh a: b becomes the LRU
+    assert pf.request_prefetch("c", 6.0)
+    assert ("stage_evict", "b") in pf.events
+    assert staging.contains("a") and staging.contains("c")
+    assert not staging.contains("b")
+    assert staging.used_bytes <= 20 * MB
+
+
+def test_oversized_entry_is_rejected_not_committed():
+    cluster = _cluster([_entry("big", size=30 * MB)])
+    pf = PrefetchManager(cluster, HostStagingTier(20 * MB),
+                         transport="sync")
+    assert pf.request_prefetch("big", 0.0)
+    assert pf.events == [("prefetch_start", "big"),
+                         ("stage_reject", "big")]
+    assert pf.prefetches_committed == 0
+    assert not pf.staging.contains("big")
+
+
+# ---------------------------------------------------------------------------
+# simulator integration: session trace -> warm host hits
+# ---------------------------------------------------------------------------
+
+def _sim_with_prefetch(specs, reqs, *, gbps=2.0, budget=None,
+                       transport="link"):
+    from repro.configs import get_config
+    from repro.core.adaptive import H20_TABLE
+    from repro.cluster.simulator import ServingSimulator, kvfetcher_spec
+
+    cfg = get_config("yi-34b")
+    ratios = {"240p": 9.0, "480p": 8.5, "640p": 8.0, "1080p": 7.0}
+    from repro.cluster.storage import synthetic_stored_prefix
+    entries = [synthetic_stored_prefix(
+        s.key, s.n_tokens, raw_bytes_per_token=cfg.kv_bytes_per_token(),
+        ratios=ratios, parent=s.parent) for s in specs]
+    nodes = [StorageNode("n0", link=BandwidthTrace.constant(gbps))]
+    cluster = StorageCluster(nodes)
+    for e in entries:
+        cluster.register(e, 0.0)
+    pf = PrefetchManager(cluster, HostStagingTier(None),
+                         transport=transport,
+                         mispredict_budget_bytes=budget)
+    sim = ServingSimulator(cfg, kvfetcher_spec(ratios), chip="h20",
+                           n_chips=2,
+                           bandwidth=BandwidthTrace.constant(gbps),
+                           storage=cluster, table=H20_TABLE, prefetch=pf)
+    res = sim.run(reqs, max_new_tokens=4)
+    return res, cluster, pf
+
+
+def test_sim_session_trace_serves_continuations_from_host():
+    """End-to-end over the session-continuation workload: the parent's
+    demand hit heats its child, the speculation lands between turns,
+    and the continuation resolves from host DRAM — strictly faster than
+    the same ask served cold over the WAN."""
+    specs = prefix_trie_specs(2, 2, base_tokens=40_000,
+                              ext_tokens=20_000)
+    rng = np.random.default_rng(11)
+    reqs = session_trace(rng, specs, n_sessions=3, continue_p=1.0,
+                         session_gap=60.0, think_time=200.0,
+                         max_new_tokens=4)
+    assert len(reqs) >= 4
+    res, cluster, pf = _sim_with_prefetch(specs, reqs)
+    warm = [r for r in reqs if r.storage_hit == "host"]
+    assert warm, "no continuation was served from the staging tier"
+    assert pf.host_hits == len(warm)
+    for r in warm:
+        assert r.storage_node == "host"
+        assert ("host_hit", r.prefix) in pf.events
+    # the same child asked cold (first session turn hits remote)
+    cold = [r for r in reqs if r.storage_hit == "full"
+            and r.reuse_tokens == warm[0].reuse_tokens]
+    if cold:
+        assert min(r.ttft for r in warm) < min(r.ttft for r in cold)
+
+
+def test_sim_prefetch_respects_budget_and_never_breaks_serving():
+    """A zero mispredict budget shuts speculation down (budget_reject
+    only, no staged entries) without perturbing demand serving."""
+    specs = prefix_trie_specs(2, 2, base_tokens=40_000,
+                              ext_tokens=20_000)
+    rng = np.random.default_rng(11)
+    reqs = session_trace(rng, specs, n_sessions=3, continue_p=1.0,
+                         session_gap=60.0, think_time=200.0,
+                         max_new_tokens=4)
+    res, cluster, pf = _sim_with_prefetch(specs, reqs, budget=0)
+    assert pf.prefetches_started == 0 and pf.host_hits == 0
+    assert all(k == "budget_reject" for k, _ in pf.events)
+    assert all(r.t_first_token is not None for r in reqs)
+    assert all(r.storage_hit in ("full", "partial", "miss")
+               for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# cross-environment event-sequence agreement
+# ---------------------------------------------------------------------------
+
+def test_cross_env_prefetch_then_hit_sequences_agree(tiny_cfg,
+                                                     tiny_params,
+                                                     donor_kv):
+    """A prefetch-then-hit trace — parent demand hit heats the child,
+    the sync speculation stages it, the child's ask resolves host-first
+    — must replay the identical cluster AND prefetcher event sequences
+    in the live engine (real manifests, wall clock) and the analytic
+    simulator (synthetic entries, virtual clock)."""
+    from repro.cluster.simulator import MethodSpec, ServingSimulator
+    from repro.serving.engine import LiveEngine
+
+    rng = np.random.default_rng(7)
+    tok_p = rng.integers(0, tiny_cfg.vocab_size, 32)
+    tok_c = np.concatenate([tok_p,
+                            rng.integers(0, tiny_cfg.vocab_size, 16)])
+    suffix = rng.integers(0, tiny_cfg.vocab_size, 8)
+
+    live = StorageCluster([StorageNode("n0")])
+    for toks in (tok_p, tok_c):
+        kv_k, kv_v = donor_kv(toks)
+        live.register_prefix(toks, kv_k, kv_v, tokens_per_chunk=16,
+                             resolutions=("240p",))
+    keys = list(live.catalog)  # [parent, child]; child extends parent
+    assert live.catalog[keys[1]].parent == keys[0]
+    live_pf = PrefetchManager(live, HostStagingTier(None),
+                              transport="sync")
+    eng = LiveEngine(tiny_params, tiny_cfg, live, resolution="240p",
+                     prefetch=live_pf)
+    for toks in (tok_p, tok_c):
+        eng.submit(np.concatenate([toks, suffix]),
+                   reuse_prefix="by-tokens", reuse_tokens=len(toks),
+                   max_new_tokens=2)
+        eng.run()
+
+    sim_cluster = StorageCluster([StorageNode("n0")])
+    for key in keys:
+        src = live.catalog[key]
+        sim_cluster.register(StoredPrefix(
+            key=key, n_tokens=src.n_tokens,
+            bytes_by_resolution={"240p": src.stored_bytes},
+            raw_kv_bytes=src.raw_kv_bytes, parent=src.parent), 0.0)
+    sim_pf = PrefetchManager(sim_cluster, HostStagingTier(None),
+                             transport="sync")
+    reqs = [Request(rid=i, arrival=(i + 1) * 50.0,
+                    prompt_len=n_tok + 8, reuse_tokens=n_tok,
+                    prefix=key, max_new_tokens=2)
+            for i, (key, n_tok) in enumerate(
+                zip(keys, (len(tok_p), len(tok_c))))]
+    spec = MethodSpec("kvfetcher", ratios={"stream": 8.0}, adaptive=False,
+                      fixed_resolution="240p", uses_decode_pool=False)
+    sim = ServingSimulator(tiny_cfg, spec,
+                           bandwidth=BandwidthTrace.constant(0.01),
+                           storage=sim_cluster, chunk_tokens=16,
+                           prefetch=sim_pf)
+    sim.run(reqs, max_new_tokens=2)
+
+    assert live.events == sim_cluster.events
+    assert live_pf.events == sim_pf.events
+    assert ("host_hit", keys[1]) in live_pf.events
+    assert ("prefetch_done", keys[1]) in live_pf.events
+    # the child's demand ask never touched the remote cluster
+    assert not any(e[1] == keys[1] and e[0] in ("full", "partial", "miss")
+                   for e in live.events)
+    assert reqs[1].storage_hit == "host"
+    assert live_pf.host_hits == sim_pf.host_hits == 1

@@ -712,6 +712,93 @@ def test_sim_churn_scheduled_after_last_arrival_still_executes():
     assert cluster.by_id[victim].alive
 
 
+def test_recovery_rebalance_moves_key_home_and_trims_surplus():
+    """Recovery re-balance (ISSUE bugfix): before the fix a recovered
+    node rejoined the ring empty and its keys stayed on the heal
+    survivor forever; now recovery streams them back (``rebalance``
+    events) and trims the surplus copy (``rebalance_drop``), restoring
+    replication-factor occupancy."""
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(1, 1, base_tokens=40_000)
+    cluster = _sim_cluster(cfg, specs, n_nodes=2, replication=1,
+                           heal="sync")
+    key = specs[0].key
+    home = cluster.primary_node(key)
+    other = next(n for n in cluster.nodes if n is not home)
+    assert home.contains(key) and not other.contains(key)
+    cluster.fail_node(home.node_id, 10.0)  # sync heal -> other
+    assert other.contains(key)
+    cluster.recover_node(home.node_id, 20.0)
+    assert ("rebalance", key, home.node_id) in cluster.events
+    assert ("rebalance_drop", key, other.node_id) in cluster.events
+    assert home.contains(key) and not other.contains(key)
+    assert cluster.rebalances_completed == 1
+    assert cluster.heals_completed == 1  # the fail-time heal, untouched
+
+
+def test_rtt_aware_replica_rotation_excludes_slow_node():
+    """RTT-aware replica selection (ISSUE bugfix): with no RTT samples
+    the rotation is the legacy round-robin over all residents; once a
+    replica's observed RTT drifts beyond the slack band it drops out of
+    the rotation while the near-tied fast replicas keep sharing load."""
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(1, 1, base_tokens=40_000)
+    cluster = _sim_cluster(cfg, specs, n_nodes=3, replication=3)
+    key, n_tok = specs[0].key, specs[0].n_tokens
+
+    def served(n_lookups):
+        start = len(cluster.events)
+        for _ in range(n_lookups):
+            hit = cluster.lookup(key, 0.0, requested_tokens=n_tok)
+            assert hit.kind == "full"
+        return [e[2] for e in cluster.events[start:] if e[0] == "full"]
+
+    all_ids = {n.node_id for n in cluster.nodes}
+    assert set(served(3)) == all_ids  # legacy: everyone rotates
+    fast = sorted(all_ids)[:2]
+    slow = next(iter(all_ids - set(fast)))
+    for nid in fast:
+        cluster.observe_rtt(nid, 0.010)
+    cluster.observe_rtt(slow, 0.200)  # way past the 25% slack band
+    got = served(4)
+    assert slow not in got, "slow replica still in the rotation"
+    assert set(got) == set(fast), "fast replicas must share the load"
+    # uniform samples restore the full rotation (slack band keeps
+    # near-tied nodes in) — selection stays a pure access-seq function
+    cluster.node_rtt = {nid: 0.010 for nid in all_ids}
+    assert set(served(3)) == all_ids
+
+
+def test_rtt_aware_heal_source_prefers_fast_holder():
+    """Heal/re-balance source selection (ISSUE bugfix): the source is
+    the lowest observed-RTT surviving holder; with no samples it stays
+    the legacy first-in-ring-order survivor."""
+    from repro.configs import get_config
+    cfg = get_config("yi-34b")
+    specs = prefix_trie_specs(1, 1, base_tokens=40_000)
+    key = specs[0].key
+
+    def queued_source(rtts):
+        cluster = _sim_cluster(cfg, specs, n_nodes=4, replication=3,
+                               heal="manual")
+        for nid, rtt in rtts.items():
+            cluster.observe_rtt(nid, rtt)
+        ring = cluster._ring_nodes(key)
+        cluster.fail_node(ring[0].node_id, 10.0)
+        (entry, source_id, target_id, kind), = cluster.heal_queue
+        assert kind == "heal" and entry.key == key
+        assert target_id == ring[3].node_id  # the non-holder successor
+        return source_id, ring
+
+    source_id, ring = queued_source({})
+    assert source_id == ring[1].node_id  # legacy: first survivor
+    source_id, ring = queued_source({ring[1].node_id: 0.300,
+                                     ring[2].node_id: 0.020})
+    assert source_id == ring[2].node_id  # RTT overrides ring order
+
+
 # ---------------------------------------------------------------------------
 # live engine integration (real model, real codec)
 # ---------------------------------------------------------------------------
@@ -887,8 +974,9 @@ def test_cross_env_churn_fail_heal_expire_reject_agree(tiny_cfg,
                                                        tiny_params,
                                                        donor_kv):
     """ISSUE 4 acceptance: a seeded churn trace — admission rejections,
-    TTL expiry, a node failure mid-trace, and the sync ring heal — must
-    replay the identical fail/heal/expire/reject event sequence in the
+    TTL expiry, a node failure mid-trace, the sync ring heal, and the
+    post-recovery re-balance — must replay the identical
+    fail/heal/expire/reject/recover/rebalance event sequence in the
     live engine (real manifests, wall clock) and the analytic simulator
     (synthetic entries, virtual clock)."""
     from repro.cluster.simulator import MethodSpec, ServingSimulator
@@ -915,16 +1003,21 @@ def test_cross_env_churn_fail_heal_expire_reject_agree(tiny_cfg,
     # access script: a (miss->admit), a (expire->miss->admit),
     # b (miss->admit), FAIL b's holder, b (miss or heal-hit), a again
     order = [tok_a, tok_a, tok_b, None, tok_b, tok_a]
+    failed = None
     for toks in order:
         if toks is None:
-            holder = next(n.node_id for n in live.nodes
+            failed = next(n.node_id for n in live.nodes
                           if n.contains(keys[1]))
-            eng.fail_node(holder)
+            eng.fail_node(failed)
             continue
         eng.submit(np.concatenate([toks, suffix]),
                    reuse_prefix="by-tokens", reuse_tokens=len(toks),
                    max_new_tokens=2)
         eng.run()
+    # the failed holder comes back after the trace: recovery must
+    # re-balance keys whose ring home it is back onto it (and trim the
+    # surplus copy off the heal survivor)
+    eng.recover_node(failed)
 
     # simulator side: synthetic twins under the same churn, same keys
     sim_nodes = [StorageNode(f"n{i}") for i in range(2)]
@@ -961,10 +1054,17 @@ def test_cross_env_churn_fail_heal_expire_reject_agree(tiny_cfg,
     sim = ServingSimulator(tiny_cfg, spec,
                            bandwidth=BandwidthTrace.constant(0.01),
                            storage=sim_cluster, chunk_tokens=16,
-                           fail_at=[(t_fail, sim_holder)])
+                           fail_at=[(t_fail, sim_holder)],
+                           recover_at=[(t + 25.0, sim_holder)])
     sim.run(reqs, max_new_tokens=2)
 
     assert live.events == sim_cluster.events
     kinds = [e[0] for e in live.events]
-    for needed in ("fail", "heal", "expire", "reject", "miss", "admit"):
+    for needed in ("fail", "heal", "expire", "reject", "miss", "admit",
+                   "recover", "rebalance"):
         assert needed in kinds, f"churn trace exercised no {needed!r}"
+    # the re-balance pulled b home onto its recovered ring primary and
+    # dropped the surplus copy, so replication=1 holds again
+    assert ("rebalance", keys[1], sim_holder) in sim_cluster.events
+    assert sum(n.contains(keys[1]) for n in live.nodes) == 1
+    assert live.primary_node(keys[1]).contains(keys[1])

@@ -534,6 +534,38 @@ def test_slowstart_ramp_drr_quantum():
     assert link._order == [] and link._ramp == {} and link.in_flight == 0
 
 
+def test_reopened_flow_ramp_is_not_double_advanced():
+    """Regression (ISSUE 6): flow ids are reused — a flow closed mid-ramp
+    and re-opened under the same id must not inherit the stale scheduled
+    epoch of the previous open.  Without the per-open generation token the
+    old chain's pending epoch double-advances the fresh ramp and forks a
+    second doubling chain."""
+    import heapq
+    from repro.cluster.network import SharedLink
+
+    link = SharedLink(BandwidthTrace.constant(1.0), ramp="slowstart")
+    ev, seq = [], iter(range(1 << 20))
+    link.bind(lambda t, fn: heapq.heappush(ev, (t, next(seq), fn)))
+
+    def pump(until):
+        while ev and ev[0][0] <= until:
+            t, _, fn = heapq.heappop(ev)
+            fn(t)
+
+    link.open_flow(1, t=0.0)      # first open: epoch chain due at 0.5
+    link.close_flow(1)            # closed mid-ramp...
+    link.open_flow(1, t=0.3)      # ...reused id: fresh chain due at 0.8
+
+    pump(0.6)  # stale epoch from the first open fires here
+    assert link.ramp_factor(1) == link.ramp_init  # buggy: 2x ramp_init
+    pump(0.85)  # the reopen's own first epoch
+    assert link.ramp_factor(1) == 2 * link.ramp_init
+    # one chain only: doublings land at 0.8/1.3/1.8, reaching full share
+    pump(1.85)
+    assert link.ramp_factor(1) == 1.0 and link._ramp == {}
+    assert not ev  # no forked chain left ticking
+
+
 def test_adaptive_rto_cuts_spurious_under_staggered_contention():
     """Flows joining a contended link shift everyone's service times;
     the adaptive RTO absorbs the shifts where the fixed grace fires."""
