@@ -123,8 +123,13 @@ def _wan_adaptive_rows() -> List[Row]:
     with a slow-start ramp and bursty cross-flow correlated loss.  The
     fixed grace (50 ms) sits far below contended chunk service times, so
     every above-estimate chunk fires a duplicate that steals shared
-    bandwidth; SRTT/RTTVAR absorbs the jitter.  Adaptive must strictly
-    reduce spurious retransmits AND mean TTFT."""
+    bandwidth; SRTT/RTTVAR absorbs the jitter (with RACK fast retransmit
+    + tail probe for prompt genuine-loss recovery).  Adaptive must
+    strictly reduce spurious retransmits AND mean TTFT, *paired-averaged
+    over a small panel of correlated-loss seeds*: a single seed's drop
+    schedule resamples whenever wire timings shift (the drop decision is
+    indexed by delivery slot), and that realization noise is larger than
+    the ~1-3% RTO effect the rows exist to gate."""
     import numpy as np
 
     from repro.data.workload import wan_burst_trace
@@ -132,27 +137,35 @@ def _wan_adaptive_rows() -> List[Row]:
     rows: List[Row] = []
     stats = {}
     for mode in ("adaptive", "fixed"):
-        spec = dataclasses.replace(kvfetcher_spec(RATIOS), rto_mode=mode)
-        loss = LossModel.correlated(seed=23, slot=0.2, good_to_bad=0.15,
-                                    bad_to_good=0.35, p_good=0.002,
-                                    p_bad=0.5)
-        trace = BandwidthTrace.jittered(np.random.default_rng(11), 1.0,
-                                        duration=400.0, seg_len=2.0,
-                                        rel_std=0.35)
-        sim = ServingSimulator(CFG, spec, chip="h20", n_chips=2,
-                               bandwidth=trace, loss=loss,
-                               link_ramp="slowstart", table=H20_TABLE)
-        reqs = wan_burst_trace(np.random.default_rng(3), 50_000,
-                               n_requests=4, window=3.0,
-                               max_new_tokens=8)
-        res = sim.run(reqs, max_new_tokens=8)
-        t = summarize(res.fetching())["ttft_mean"]
-        stats[mode] = (t, res.spurious_retransmits)
+        ts, retx, spur = [], 0, 0
+        for seed in (23, 7, 11):
+            spec = dataclasses.replace(kvfetcher_spec(RATIOS),
+                                       rto_mode=mode)
+            loss = LossModel.correlated(seed=seed, slot=0.2,
+                                        good_to_bad=0.15,
+                                        bad_to_good=0.35, p_good=0.002,
+                                        p_bad=0.5)
+            trace = BandwidthTrace.jittered(np.random.default_rng(11),
+                                            1.0, duration=400.0,
+                                            seg_len=2.0, rel_std=0.35)
+            sim = ServingSimulator(CFG, spec, chip="h20", n_chips=2,
+                                   bandwidth=trace, loss=loss,
+                                   link_ramp="slowstart",
+                                   table=H20_TABLE)
+            reqs = wan_burst_trace(np.random.default_rng(3), 50_000,
+                                   n_requests=4, window=3.0,
+                                   max_new_tokens=8)
+            res = sim.run(reqs, max_new_tokens=8)
+            ts.append(summarize(res.fetching())["ttft_mean"])
+            retx += res.retransmits
+            spur += res.spurious_retransmits
+        t = sum(ts) / len(ts)
+        stats[mode] = (t, spur)
         rows.append((f"ttft.wan.adaptive.rto_{mode}", t * 1e6, t))
         rows.append((f"ttft.wan.adaptive.rto_{mode}.retransmits", 0.0,
-                     float(res.retransmits)))
+                     float(retx)))
         rows.append((f"ttft.wan.adaptive.rto_{mode}.spurious", 0.0,
-                     float(res.spurious_retransmits)))
+                     float(spur)))
     t_ad, spur_ad = stats["adaptive"]
     t_fx, spur_fx = stats["fixed"]
     assert spur_ad < spur_fx, \
@@ -166,6 +179,46 @@ def _wan_adaptive_rows() -> List[Row]:
                  t_fx / t_ad))
     rows.append(("ttft.wan.adaptive.speedup_spurious_fixed_vs_adaptive",
                  0.0, (1.0 + spur_fx) / (1.0 + spur_ad)))
+    return rows
+
+
+def _abr_rows() -> List[Row]:
+    """ISSUE 7 acceptance: online ABR resolution selection across the
+    bandwidth sweep (constrained WAN -> fast LAN).  The adaptive
+    selector (minimum total pipelined time per chunk, down-switching
+    mid-fetch when the share collapses) must beat EVERY fixed ladder
+    rung on mean TTFT over the sweep: low bandwidth is transmit-bound
+    (240p territory), high bandwidth is decode-bound (1080p's shorter
+    decode wins).  Both the adaptive-vs-best-fixed and the
+    adaptive-vs-worst-fixed ratios are regression-gated."""
+    rows: List[Row] = []
+    sweep = (1.0, 2.0, 4.0, 8.0, 16.0, 40.0)
+    fixed = ("240p", "480p", "640p", "1080p")
+    methods = [("adaptive", kvfetcher_spec(RATIOS))]
+    methods += [(r, dataclasses.replace(kvfetcher_spec(RATIOS),
+                                        adaptive=False,
+                                        fixed_resolution=r,
+                                        name=f"kvfetcher_{r}"))
+                for r in fixed]
+    means = {}
+    for name, spec in methods:
+        ts = [_ttft(spec, gbps, 50_000) for gbps in sweep]
+        for gbps, t in zip(sweep, ts):
+            rows.append((f"ttft.abr.{name}.bw{gbps:g}", t * 1e6, t))
+        means[name] = sum(ts) / len(ts)
+        rows.append((f"ttft.abr.{name}.mean", means[name] * 1e6,
+                     means[name]))
+    for r in fixed:
+        assert means["adaptive"] < means[r], \
+            (f"adaptive mean TTFT {means['adaptive']:.3f}s must beat "
+             f"fixed {r} ({means[r]:.3f}s) across the sweep")
+    best = min(means[r] for r in fixed)
+    worst = max(means[r] for r in fixed)
+    # gated ratios (tools/check_bench.py): higher is better
+    rows.append(("ttft.abr.speedup_adaptive_vs_best_fixed", 0.0,
+                 best / means["adaptive"]))
+    rows.append(("ttft.abr.speedup_adaptive_vs_worst_fixed", 0.0,
+                 worst / means["adaptive"]))
     return rows
 
 
@@ -595,6 +648,7 @@ def run() -> List[Row]:
                          f".ctx{ctx // 1000}k", 0.0, base / ours))
     rows.extend(_wan_sim_rows())
     rows.extend(_wan_adaptive_rows())
+    rows.extend(_abr_rows())
     rows.extend(_storage_rows())
     rows.extend(_storage_failover_rows())
     rows.extend(_prefetch_rows())

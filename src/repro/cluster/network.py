@@ -424,6 +424,12 @@ class SharedLink:
         self._ramp_gen: Dict[int, int] = {}
         self._push: Optional[Callable[[float, Callable], None]] = None
         self._weights: Dict[int, float] = {}
+        # share-change observers (ABR down-switching, ISSUE 7): called
+        # with (t, reason) whenever the per-flow share structure moves —
+        # a flow joins/leaves or a slow-start ramp epoch fires — so the
+        # fetch controller can re-evaluate remaining chunks' resolution
+        # at the collapse instant instead of a chunk boundary later
+        self._share_listeners: List[Callable[[float, str], None]] = []
         # fair-mode state: fluid frontier + in-flight transfers
         self._xfers: List[_Xfer] = []
         self._t = 0.0
@@ -444,6 +450,22 @@ class SharedLink:
     def bind(self, push: Callable[[float, Callable], None]) -> None:
         """Receive the controller's event-queue ``push(t, fn)`` handle."""
         self._push = push
+
+    def on_share_change(self,
+                        fn: Callable[[float, str], None]) -> None:
+        """Subscribe to share-structure changes.  ``fn(t, reason)`` fires
+        synchronously when a flow joins (``"flow_join"``), leaves with a
+        known time (``"flow_leave"``), or a slow-start ramp epoch
+        re-shares the link (``"ramp_epoch"``).  Deterministic: driven
+        only by open/close/ramp events on the virtual clock."""
+        if fn not in self._share_listeners:
+            self._share_listeners.append(fn)
+
+    def _notify_share(self, t: Optional[float], reason: str) -> None:
+        if t is None:
+            return  # no virtual-clock timestamp: nothing to re-time
+        for fn in list(self._share_listeners):
+            fn(t, reason)
 
     def open_flow(self, flow: int, weight: float = 1.0,
                   t: Optional[float] = None) -> None:
@@ -468,6 +490,7 @@ class SharedLink:
                        lambda tt, fl=flow, g=gen: self._ramp_epoch(fl, tt, g))
         else:
             self._ramp.pop(flow, None)
+        self._notify_share(t, "flow_join")
 
     def _ramp_epoch(self, flow: int, t: float, gen: int) -> None:
         """One slow-start doubling; re-times in-flight transfers."""
@@ -487,11 +510,17 @@ class SharedLink:
                        lambda tt, fl=flow, g=gen: self._ramp_epoch(fl, tt, g))
         if self.policy == "fair":
             self._reschedule()
+        self._notify_share(t, "ramp_epoch")
 
-    def close_flow(self, flow: int) -> None:
+    def close_flow(self, flow: int, t: Optional[float] = None) -> None:
+        """Unregister a flow.  ``t`` (optional) timestamps the leave for
+        share-change listeners; legacy callers that omit it skip the
+        notification (a leave only ever *raises* the survivors' shares,
+        so no down-switch is missed)."""
         self._weights.pop(flow, None)
         self._ramp.pop(flow, None)
         self._reap(flow)
+        self._notify_share(t, "flow_leave")
 
     # -- trace passthrough (estimator seeding; bulk blocking baseline) ------
     def bw_at(self, t: float) -> float:
@@ -699,6 +728,30 @@ class SharedLink:
         window: the fetch controller divides its projected service time
         by this, so self-imposed ramp slowness never reads as loss."""
         return self._ramp.get(flow, 1.0)
+
+    def flow_share(self, flow: int) -> float:
+        """Fraction of the trace capacity ``flow`` would receive right
+        now under the fluid model: its (ramp-scaled) weighted share over
+        every *open* flow, plus its part of the capacity that ramping
+        flows leave unclaimed (redistributed to fully-ramped flows by
+        weight, mirroring :meth:`_shares`).  Unlike ``_shares`` this is
+        a pure function of the open/close/ramp state — no in-flight
+        transfer bookkeeping — so the fetch controller can use it to
+        rescale its bandwidth estimate deterministically when the share
+        structure moves (ABR down-switching).  An unknown flow sees the
+        full pipe (1.0)."""
+        if flow not in self._weights:
+            return 1.0
+        w = self._weights
+        W = sum(w.values())
+        share = {f: w[f] / W * self._ramp.get(f, 1.0) for f in w}
+        leftover = 1.0 - sum(share.values())
+        full = [f for f in w if f not in self._ramp]
+        if leftover > 1e-12 and full:
+            Wf = sum(w[f] for f in full)
+            for f in full:
+                share[f] += leftover * w[f] / Wf
+        return share[flow]
 
 
 def make_link(bandwidth, policy: Optional[str] = None,

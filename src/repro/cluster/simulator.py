@@ -88,6 +88,11 @@ class MethodSpec:
     # aborts the fetch and falls back to full prefill via
     # notify_fetch_miss instead of stalling the request forever.
     max_attempts: int = 64
+    # Resolution ladder the fetcher may select from (ABR selection picks
+    # within this set; a storage hit further restricts it to the rungs
+    # still resident on the serving node).  Cross-env tests narrow this
+    # to match the live engine's registered manifest ladder.
+    resolutions: Tuple[str, ...] = RESOLUTIONS
 
 
 def kvfetcher_spec(ratios: Dict[str, float]) -> MethodSpec:
@@ -143,6 +148,11 @@ class SimResult:
     # duplicate was cancelled and its bytes wasted — the signature of a
     # retransmit timeout shorter than the contended chunk service time
     spurious_retransmits: int = 0
+    # ABR down/up-switch events, in emission order:
+    # (rid, chunk_seq, from_res, to_res, reason) — timestamp-free so the
+    # cross-environment replay tests compare them directly
+    resolution_switches: List[Tuple[int, int, str, str, str]] = \
+        dataclasses.field(default_factory=list)
 
     def fetching(self) -> List[Request]:
         return [r for r in self.requests if r.needs_fetch]
@@ -252,7 +262,7 @@ class ServingSimulator:
                 blocking_fetch=method.blocking_fetch,
                 gpu_decomp_tokens_per_s=method.gpu_decomp_tokens_per_s,
                 use_table_sizes=method.use_table_sizes,
-                resolutions=RESOLUTIONS,
+                resolutions=method.resolutions,
                 rto_mode=method.rto_mode,
                 max_attempts=method.max_attempts),
             hooks=_SimHooks(self), prefetcher=prefetch)
@@ -269,6 +279,9 @@ class ServingSimulator:
             # completed fetches report their flow's smoothed RTT keyed
             # by serving node — drives RTT-aware replica/heal selection
             self.ctrl.rtt_sink = storage.observe_rtt
+            # ...and which resolutions they actually delivered, steering
+            # per-resolution eviction on the serving node
+            self.ctrl.res_sink = storage.note_resolution_use
         self.prefetch = prefetch
         if prefetch is not None:
             assert storage is not None, "prefetch= needs a storage cluster"
@@ -330,7 +343,9 @@ class ServingSimulator:
             req.requested_reuse_tokens = req.reuse_tokens
             req.reuse_tokens = hit.covered_tokens
         self.ctrl.start(req, self._build_plan(req), now,
-                        link=hit.node.link)
+                        link=hit.node.link,
+                        resolutions=hit.resolutions,
+                        served_key=hit.entry.key)
         return False
 
     # -- main loop ----------------------------------------------------------------
@@ -453,4 +468,6 @@ class ServingSimulator:
                          sim_time=now,
                          retransmits=self.ctrl.retransmits_total,
                          spurious_retransmits=(
-                             self.ctrl.spurious_retransmits_total))
+                             self.ctrl.spurious_retransmits_total),
+                         resolution_switches=(
+                             self.ctrl.resolution_switches))

@@ -77,6 +77,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 import numpy as np
 
 from repro.core.chunks import KVManifest, encode_prefix, prefix_key
+from repro.core.layout import RESOLUTION_ORDER
 from repro.cluster.network import HEAL_WEIGHT, make_link
 
 #: bytes per gigabyte, for constructors/repr (internal unit is bytes).
@@ -173,12 +174,24 @@ def synthetic_stored_prefix(key: str, n_tokens: int, *,
 
 @dataclasses.dataclass
 class _Resident:
-    """Node-local accounting for one resident prefix."""
+    """Node-local accounting for one resident prefix.
+
+    ``res_bytes`` is the *resident* subset of the entry's resolution
+    ladder (per-resolution eviction shrinks it; the catalog entry keeps
+    the full ladder).  ``res_hits``/``res_used`` record which rungs the
+    adaptive fetcher actually delivered (fed by
+    :meth:`StorageNode.note_resolution_use`); ``res_used`` is a
+    node-global use sequence number, not a clock, so recency compares
+    identically in both environments.
+    """
     entry: StoredPrefix
     stored_at: float
     last_used: float
     hits: int = 0
     seq: int = 0  # admission order, the deterministic tie-breaker
+    res_bytes: Dict[str, int] = dataclasses.field(default_factory=dict)
+    res_hits: Dict[str, int] = dataclasses.field(default_factory=dict)
+    res_used: Dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -211,17 +224,35 @@ class StorageNode:
     behaviour `KVStore` keeps).  ``link`` is the node's own
     `SharedLink`; fetches for prefixes resident here are routed over it,
     so placement decisions change observed TTFT.
+
+    Eviction granularity (ISSUE 7):
+
+    ``evict_granularity="prefix"`` (default) evicts whole prefixes —
+    the legacy behaviour every existing baseline assumes.
+    ``"resolution"`` evicts one *resolution rung* at a time: the victim
+    is the coldest ``(prefix, resolution)`` pair under the node's
+    policy (per-rung hits/recency fed by :meth:`note_resolution_use`,
+    same tie-breakers), so capacity pressure sheds the ladder rungs the
+    adaptive fetcher never picks while the prefix itself stays
+    fetchable.  Only when a prefix's *last* rung is the victim does the
+    whole prefix go.  The resident subset is visible via
+    :meth:`resident_resolutions` and travels on `StorageHit.resolutions`
+    so the fetch controller only selects among rungs that still exist.
     """
 
     POLICIES = ("lru", "lfu", "cost")
 
     def __init__(self, node_id: str, capacity_bytes: Optional[float] = None,
-                 *, policy: str = "lru", link=None):
+                 *, policy: str = "lru", link=None,
+                 evict_granularity: str = "prefix"):
         assert policy in self.POLICIES, policy
+        assert evict_granularity in ("prefix", "resolution"), \
+            evict_granularity
         self.node_id = node_id
         self.capacity_bytes = (None if capacity_bytes is None
                                else int(capacity_bytes))
         self.policy = policy
+        self.evict_granularity = evict_granularity
         # one persistent SharedLink per node (a bare BandwidthTrace is
         # wrapped once here, NOT per fetch, so concurrent fetches from
         # this node contend on the same arbiter)
@@ -232,6 +263,7 @@ class StorageNode:
         self.stats = NodeStats()
         self.failed = False
         self._seq = 0
+        self._use_seq = 0  # per-resolution recency counter (clock-free)
 
     def __repr__(self) -> str:
         cap = ("unbounded" if self.capacity_bytes is None else
@@ -300,7 +332,7 @@ class StorageNode:
         r.last_used = now
         r.hits += 1
         self.stats.hits += 1
-        self.stats.bytes_served += r.entry.stored_bytes
+        self.stats.bytes_served += sum(r.res_bytes.values())
         return r.entry
 
     def put(self, entry: StoredPrefix, now: float
@@ -329,40 +361,60 @@ class StorageNode:
             if size > self.capacity_bytes - pinned_bytes:
                 if old is not None:  # keep the previous version resident
                     self.residents[entry.key] = old
-                    self._account(old.entry, +1)
+                    self._account(old.res_bytes, +1)
                 self.stats.rejections += 1
                 return False, []
         evicted: List[str] = []
         while (self.capacity_bytes is not None
                and self.used_bytes + size > self.capacity_bytes):
-            victim = self._pick_victim()
-            self._drop(victim)
-            evicted.append(victim)
+            if self.evict_granularity == "resolution":
+                vkey, vres = self._pick_victim_res()
+                if vres is None:  # last rung: the whole prefix goes
+                    self._drop(vkey)
+                    evicted.append(vkey)
+                else:
+                    self._drop_res(vkey, vres)
+                    evicted.append(f"{vkey}/{vres}")
+            else:
+                victim = self._pick_victim()
+                self._drop(victim)
+                evicted.append(victim)
         if old is not None:
             seq, hits = old.seq, old.hits
+            res_hits, res_used = old.res_hits, old.res_used
         else:
             self._seq += 1
             seq, hits = self._seq, 0
             self.stats.admissions += 1
-        self.residents[entry.key] = _Resident(entry, stored_at=now,
-                                              last_used=now, seq=seq,
-                                              hits=hits)
-        self._account(entry, +1)
+            res_hits, res_used = {}, {}
+        # re-admission restores the full ladder (evicted rungs return)
+        self.residents[entry.key] = _Resident(
+            entry, stored_at=now, last_used=now, seq=seq, hits=hits,
+            res_bytes=dict(entry.bytes_by_resolution),
+            res_hits=res_hits, res_used=res_used)
+        self._account(entry.bytes_by_resolution, +1)
         return True, evicted
 
-    def _account(self, entry: StoredPrefix, sign: int) -> None:
-        self.used_bytes += sign * entry.stored_bytes
-        for res, b in entry.bytes_by_resolution.items():
+    def _account(self, by_res: Dict[str, int], sign: int) -> None:
+        for res, b in by_res.items():
+            self.used_bytes += sign * b
             self.bytes_by_resolution[res] = \
                 self.bytes_by_resolution.get(res, 0) + sign * b
 
     def _remove(self, key: str) -> None:
         """Drop residency + byte accounting (no eviction stat)."""
         r = self.residents.pop(key)
-        self._account(r.entry, -1)
+        self._account(r.res_bytes, -1)
 
     def _drop(self, key: str) -> None:
         self._remove(key)
+        self.stats.evictions += 1
+
+    def _drop_res(self, key: str, res: str) -> None:
+        """Evict one resolution rung of a resident prefix."""
+        r = self.residents[key]
+        b = r.res_bytes.pop(res)
+        self._account({res: b}, -1)
         self.stats.evictions += 1
 
     def _pick_victim(self) -> str:
@@ -387,6 +439,64 @@ class StorageNode:
             victim = min(rs, key=lambda r: (score(r),) + lru_key(r))
         return victim.entry.key
 
+    def _pick_victim_res(self) -> Tuple[str, Optional[str]]:
+        """Per-resolution victim: the coldest resident ``(prefix,
+        rung)`` pair under the node's policy.  Recency is the clock-free
+        ``res_used`` sequence; ties break on the prefix's LRU order,
+        admission order, then ladder position — deterministic in every
+        environment.  Returns ``(key, None)`` when the victim is the
+        prefix's last resident rung (caller drops the whole prefix)."""
+        res_idx = {r: i for i, r in enumerate(RESOLUTION_ORDER)}
+
+        def cand_key(r: _Resident, res: str):
+            recency = (r.res_used.get(res, 0), r.last_used, r.seq,
+                       res_idx.get(res, -1))
+            if self.policy == "lru":
+                return recency
+            hits = r.res_hits.get(res, 0)
+            if self.policy == "lfu":
+                return (hits,) + recency
+            # cost: bytes saved per byte stored, per rung
+            saved = hits * max(r.entry.raw_kv_bytes, r.res_bytes[res])
+            return (saved / max(r.res_bytes[res], 1),) + recency
+
+        best = None
+        best_key = None
+        for r in self.residents.values():
+            if r.entry.pinned:
+                continue
+            for res in r.res_bytes:
+                k = cand_key(r, res)
+                if best_key is None or k < best_key:
+                    best_key, best = k, (r, res)
+        assert best is not None, "no evictable rung (all pinned?)"
+        r, res = best
+        if len(r.res_bytes) == 1:
+            return r.entry.key, None
+        return r.entry.key, res
+
+    def note_resolution_use(self, key: str, res: str) -> None:
+        """Record that the fetch path actually delivered ``res`` of
+        ``key`` from this node (fed by the controller's ``res_sink``
+        at fetch completion).  Bumps the rung's hit count and recency
+        sequence so per-resolution eviction keeps the rungs the
+        adaptive selector really uses."""
+        r = self.residents.get(key)
+        if r is None or res not in r.res_bytes:
+            return
+        self._use_seq += 1
+        r.res_hits[res] = r.res_hits.get(res, 0) + 1
+        r.res_used[res] = self._use_seq
+
+    def resident_resolutions(self, key: str) -> Optional[Tuple[str, ...]]:
+        """The resolutions of ``key`` still resident here (ladder order),
+        or None when the prefix is not resident at all."""
+        r = self.residents.get(key)
+        if r is None:
+            return None
+        res_idx = {res: i for i, res in enumerate(RESOLUTION_ORDER)}
+        return tuple(sorted(r.res_bytes, key=lambda s: res_idx.get(s, -1)))
+
     def stored_bytes(self) -> int:
         """Total encoded bytes resident on this node."""
         return self.used_bytes
@@ -409,6 +519,12 @@ class StorageHit:
     so the environment can call
     :meth:`StorageCluster.notify_recompute_done` once the fallback
     prefill finishes (delayed write-on-miss).
+
+    ``resolutions`` is the serving node's *resident* rung set for
+    ``entry`` (ladder order) — per-resolution eviction may have shed
+    rungs, and the adaptive fetcher must only select among blobs that
+    still exist.  None means unrestricted (miss, or caller that does
+    not track residency).
     """
 
     kind: str  # "full" | "partial" | "miss"
@@ -417,6 +533,7 @@ class StorageHit:
     entry: Optional[StoredPrefix] = None
     node: Optional[StorageNode] = None
     missed_key: Optional[str] = None
+    resolutions: Optional[Tuple[str, ...]] = None
 
 
 class StorageCluster:
@@ -644,7 +761,11 @@ class StorageCluster:
             self.events.append(("expire", k, node.node_id))
         ok, evicted = node.put(entry, now)
         for k in evicted:
-            self.events.append(("evict", k, node.node_id))
+            # per-resolution eviction reports "key/res" tokens (prefix
+            # keys are hex digests, so "/" is unambiguous)
+            kind_ev = ("evict_res" if node.evict_granularity == "resolution"
+                       and "/" in k else "evict")
+            self.events.append((kind_ev, k, node.node_id))
         if ok:
             self.events.append((kind, entry.key, node.node_id))
         else:
@@ -681,6 +802,19 @@ class StorageCluster:
                 continue
             out.append(n)
         return out
+
+    def note_resolution_use(self, node_id: str, key: str,
+                            res: str) -> None:
+        """Per-resolution usage feedback from the fetch controller's
+        ``res_sink`` hook: the fetch for ``key`` served from ``node_id``
+        actually delivered resolution ``res``.  Not logged to
+        :attr:`events` (it is derived from the fetch outcome, which the
+        replay tests already compare); it only steers per-resolution
+        eviction recency/frequency on the node."""
+        node = self.by_id.get(node_id)
+        if node is None or not node.alive:
+            return
+        node.note_resolution_use(key, res)
 
     def observe_rtt(self, node_id: str, srtt: float) -> None:
         """Fold one completed fetch's smoothed RTT into ``node_id``'s
@@ -793,7 +927,9 @@ class StorageCluster:
             self._maybe_replicate(cand, now)
             return StorageHit(kind=kind, requested_tokens=requested,
                               covered_tokens=min(cand.n_tokens, requested),
-                              entry=cand, node=node)
+                              entry=cand, node=node,
+                              resolutions=node.resident_resolutions(
+                                  cand.key))
         self.misses += 1
         self.events.append(("miss", key, ""))
         if self.write_on_miss and want is not None:

@@ -6,8 +6,20 @@ clock, shared by the live serving engine (`repro.serving.engine`) and the
 cluster simulator (`repro.cluster.simulator`) so the two can never
 diverge.  Per chunk the controller
 
-  * selects the resolution with Alg. 1 (`select_resolution`) from the
-    bandwidth estimate and decode-pool load,
+  * selects the resolution with Alg. 1 (`select_resolution`) — ABR
+    style (ISSUE 7): minimum total pipelined time from the flow's live
+    bandwidth estimate (the Jacobson/Karels `RttEstimator` service-time
+    view once it has samples, rescaled by the flow's current
+    `SharedLink.flow_share` and halved per outstanding lost chunk) vs
+    the per-resolution decode-table projection at the pool's load.
+    When the share structure collapses mid-fetch — a flow joins the
+    link, a slow-start ramp epoch re-shares it, or a loss burst is
+    confirmed — the controller re-evaluates immediately and
+    down-switches the *remaining* chunks, recording a deterministic
+    ``resolution_switch`` event ``(rid, chunk_seq, from, to, reason)``
+    that replays identically in the simulator and the live engine
+    (the decisions are pure functions of wire timings and link state,
+    never of wall-clock interleaving),
   * transmits it over the shared link (`repro.cluster.network.SharedLink`
     arbitrates concurrent fetches; a bare `BandwidthTrace` is wrapped into
     a single-flow link) — or, with the multi-node storage tier, over the
@@ -98,6 +110,15 @@ class PipelineConfig:
     # (the non-adaptive baseline the ttft.wan.adaptive.* bench rows
     # compare against).
     rto_mode: str = "adaptive"
+    # RACK-style fast retransmit (RFC 8985 in spirit): the delivery of a
+    # later-sent chunk reveals the sequence gap left by an earlier chunk
+    # whose every copy is known lost, so the sender resends immediately
+    # instead of waiting out the full RTO.  It only acts on
+    # confirmed-loss state (no copy in flight), so it can never fire a
+    # spurious duplicate; the timer stays as the last resort for tail
+    # losses with no later delivery to ack past them.  Applies to both
+    # rto modes — it is a recovery mechanism, not a deadline policy.
+    fast_retransmit: bool = True
     # fixed-mode grace beyond the projected wire time; also pads the
     # adaptive pre-sample seed (3x projected service + this grace).
     retransmit_timeout: float = 0.05
@@ -157,6 +178,7 @@ class _ChunkTx:
         default_factory=dict)
     timer_attempt: int = 0  # attempt the armed retransmit timer covers
     fires: int = 0  # consecutive timer fires (backoff exponent)
+    last_submit: float = 0.0  # submit time of the newest attempt
 
 
 @dataclasses.dataclass
@@ -171,6 +193,19 @@ class ActiveFetch:
     # so placement decisions change the observed network path.
     link: Optional[object] = None
     active_res: Optional[str] = None
+    # resolutions actually resident at the serving storage node (None =
+    # unrestricted): with per-resolution eviction a node may hold only
+    # part of the encoded ladder, and the ABR selection must not pick a
+    # rung that was evicted (`StorageHit.resolutions`)
+    avail_res: Optional[Tuple[str, ...]] = None
+    # storage key this fetch serves (for the per-resolution usage sink)
+    served_key: Optional[str] = None
+    # link share fraction at the last goodput sample: selection rescales
+    # the estimate by share_now/est_share when the structure moves
+    est_share: float = 1.0
+    # deterministic ABR event log: (rid, chunk_seq, from, to, reason)
+    resolution_switches: List[Tuple[int, int, str, str, str]] = \
+        dataclasses.field(default_factory=list)
     gpu_decomp_until: float = 0.0
     chunk_latencies: List[float] = dataclasses.field(default_factory=list)
     pending_retx: Set[int] = dataclasses.field(default_factory=set)
@@ -216,13 +251,26 @@ class FetchController:
         # completed fetch reports its flow's RTT estimate keyed by the
         # serving storage node, driving RTT-aware replica selection
         self.rtt_sink: Optional[Callable[[str, float], None]] = None
+        # per-resolution usage sink (StorageCluster.note_resolution_use):
+        # each completed fetch reports which encoded resolutions it
+        # actually pulled, keyed by (node, key) — cost-aware eviction
+        # uses the counts to keep hot resolutions and shed cold ones
+        self.res_sink: Optional[Callable[[str, str, str], None]] = None
         self.active: Dict[int, ActiveFetch] = {}
         self.now = 0.0
         self.buffer_high_water = 0.0
         self.retransmits_total = 0  # across all fetches (WAN stats)
         self.spurious_retransmits_total = 0  # duplicates of live copies
+        # global ABR event log across fetches, in decision order:
+        # (rid, chunk_seq, from_res, to_res, reason) — reasons are
+        # "estimate" (chunk-boundary re-selection), "flow_join" /
+        # "ramp_epoch" (link share collapse), "loss" (confirmed drop).
+        # Deterministic given the access sequence: cross-env replay
+        # tests assert simulator == live engine on this log.
+        self.resolution_switches: List[Tuple[int, int, str, str, str]] = []
         self._events: List[Tuple[float, int, Callable[[float], None]]] = []
         self._eid = 0
+        self.link.on_share_change(self._on_share_change)
 
     # -- event queue --------------------------------------------------------
     def _push(self, t: float, fn: Callable[[float], None]) -> None:
@@ -277,21 +325,30 @@ class FetchController:
 
     # -- fetch lifecycle ----------------------------------------------------
     def start(self, req: Request, plan: FetchPlan, now: float, *,
-              link=None) -> ActiveFetch:
+              link=None, resolutions: Optional[Sequence[str]] = None,
+              served_key: Optional[str] = None) -> ActiveFetch:
         """Begin fetching ``plan``.  ``link`` (optional) routes this fetch
         over a specific `SharedLink` — e.g. the storage node holding the
         prefix — instead of the controller's default link; per-fetch links
-        share this controller's event queue."""
+        share this controller's event queue.  ``resolutions`` (optional)
+        restricts the ABR selection to the encodings actually resident at
+        the serving node (per-resolution eviction may have shed part of
+        the ladder); ``served_key`` names the stored prefix for the
+        per-resolution usage sink."""
         req.fetch_started = now
         lnk = self.link if link is None else make_link(link)
         lnk.bind(self._push)
+        lnk.on_share_change(self._on_share_change)
         if self.prefetcher is not None:
             # demand traffic needs this link: in-flight speculation on
             # it is cancelled before the flow opens (host-tier fetches
             # cancel nothing — they ride the staging link)
             self.prefetcher.demand_started(req, lnk, now)
         f = ActiveFetch(req, plan, BandwidthEstimator(lnk.bw_at(now)),
-                        trans_free_at=now, link=lnk)
+                        trans_free_at=now, link=lnk,
+                        avail_res=(tuple(resolutions)
+                                   if resolutions else None),
+                        served_key=served_key)
         self.active[req.rid] = f
         lnk.open_flow(req.rid, weight=getattr(req, "weight", 1.0), t=now)
         if self.config.blocking_fetch:
@@ -354,15 +411,64 @@ class FetchController:
             return self.table.chunk_size_mb[res] * 1e6
         return self.hooks.chunk_bytes(f, pc, res)
 
-    def _available_res(self, pc: PlannedChunk) -> Tuple[str, ...]:
+    def _available_res(self, f: Optional[ActiveFetch],
+                       pc: PlannedChunk) -> Tuple[str, ...]:
         if pc.sizes:
-            return tuple(r for r in self.config.resolutions
+            base = tuple(r for r in self.config.resolutions
                          if r in pc.sizes)
-        return self.config.resolutions
+        else:
+            base = self.config.resolutions
+        if f is not None and f.avail_res:
+            # resolutions evicted at the serving node are not fetchable
+            restricted = tuple(r for r in base if r in f.avail_res)
+            if restricted:
+                return restricted
+        return base
+
+    def _sel_bw(self, f: ActiveFetch, now: float) -> float:
+        """Bandwidth estimate feeding the ABR selection (bytes/sec):
+        the flow's achieved rate — the Jacobson/Karels `RttEstimator`
+        smoothed service time over the active resolution's chunk bytes
+        once it has samples (Karn-filtered, so retransmission ambiguity
+        never pollutes it), the raw goodput estimator before that —
+        rescaled by how the flow's link share has moved since the last
+        sample (``flow_share(now) / est_share``: a flow join or ramp
+        epoch is visible *immediately*, not one smoothed sample later),
+        and halved per outstanding lost chunk (multiplicative decrease
+        while a loss burst is in progress).  Every input is wire-side
+        state, so the resulting switch decisions are deterministic
+        across environments with matching wire timings."""
+        rate = f.est.est
+        if f.rtt.srtt is not None and f.active_res is not None:
+            plan = f.plan
+            pc = plan.chunks[min(plan.next_to_send, len(plan.chunks) - 1)]
+            if not pc.sizes or f.active_res in pc.sizes:
+                rate = (self._chunk_bytes(f, pc, f.active_res)
+                        / max(f.rtt.srtt, 1e-9))
+        if hasattr(f.link, "flow_share"):
+            rate *= (f.link.flow_share(f.req.rid)
+                     / max(f.est_share, 1e-9))
+        rate /= 2.0 ** min(len(f.pending_retx), 8)
+        return max(rate, 1.0)
+
+    def _select(self, f: ActiveFetch, pc: PlannedChunk,
+                now: float) -> str:
+        """One ABR selection (Alg. 1, minimum total pipelined time) for
+        ``pc`` from the live share-adjusted bandwidth estimate and the
+        decode pool's current load."""
+        avail = self._available_res(f, pc)
+        sizes = (None if self.config.use_table_sizes else
+                 {r: int(self._chunk_bytes(f, pc, r)) for r in avail})
+        load = self.pool.load_at(now) if self.pool else 0
+        res, _ = select_resolution(self._sel_bw(f, now), load, self.table,
+                                   sizes_bytes=sizes,
+                                   active_resolution=f.active_res,
+                                   resolutions=avail)
+        return res
 
     def _choose_resolution(self, f: ActiveFetch, pc: PlannedChunk,
                            now: float) -> str:
-        avail = self._available_res(pc)
+        avail = self._available_res(f, pc)
         if not self.config.adaptive or self.table is None:
             res = self.config.fixed_resolution
             if not avail or res in avail:
@@ -373,14 +479,52 @@ class FetchController:
             lower = [r for r in avail
                      if RESOLUTION_ORDER.index(r) <= want]
             return lower[-1] if lower else avail[0]
-        sizes = (None if self.config.use_table_sizes else
-                 {r: int(self._chunk_bytes(f, pc, r)) for r in avail})
-        load = self.pool.load_at(now) if self.pool else 0
-        res, _ = select_resolution(f.est.est, load, self.table,
-                                   sizes_bytes=sizes,
-                                   active_resolution=f.active_res,
-                                   resolutions=avail)
-        return res
+        return self._select(f, pc, now)
+
+    def _record_switch(self, f: ActiveFetch, seq: int, old: str,
+                       new: str, reason: str) -> None:
+        evt = (f.req.rid, seq, old, new, reason)
+        f.resolution_switches.append(evt)
+        self.resolution_switches.append(evt)
+
+    def _on_share_change(self, t: float, reason: str) -> None:
+        """A subscribed link's share structure moved (flow join / leave,
+        slow-start ramp epoch): re-evaluate every active adaptive fetch
+        so the *remaining* chunks down-switch at the collapse instant
+        instead of a chunk boundary later.  Fetches on an unrelated
+        link see an unchanged ``flow_share`` and re-select identically
+        (no event); a leave only grows the survivors' shares, so no
+        down-switch can be missed by skipping it."""
+        if reason == "flow_leave":
+            return
+        for f in list(self.active.values()):
+            self._reconsider(f, t, reason)
+
+    def _reconsider(self, f: ActiveFetch, now: float,
+                    reason: str) -> None:
+        """Re-run the ABR selection for the remaining chunks of one
+        active fetch at a share-collapse signal.  Only *down*-switches
+        apply mid-fetch — the collapse evidence is structural (join /
+        ramp re-share / confirmed loss), while an upgrade safely waits
+        for the next chunk boundary's own selection — and an applied
+        switch is recorded as a deterministic ``resolution_switch``
+        event against the first not-yet-sent chunk."""
+        if (not self.config.adaptive or self.table is None
+                or f.active_res is None):
+            return
+        plan = f.plan
+        if plan.aborted or plan.next_to_send >= len(plan.chunks):
+            return
+        res = self._select(f, plan.chunks[plan.next_to_send], now)
+        if res == f.active_res:
+            return
+        order = RESOLUTION_ORDER
+        if (res in order and f.active_res in order
+                and order.index(res) >= order.index(f.active_res)):
+            return  # an up-switch: leave it to the next chunk boundary
+        self._record_switch(f, plan.next_to_send, f.active_res, res,
+                            reason)
+        f.active_res = res
 
     def _send_next(self, f: ActiveFetch, now: float) -> None:
         plan = f.plan
@@ -390,6 +534,8 @@ class FetchController:
         pc = plan.chunks[seq]
         plan.next_to_send += 1
         res = self._choose_resolution(f, pc, now)
+        if f.active_res is not None and res != f.active_res:
+            self._record_switch(f, seq, f.active_res, res, "estimate")
         pc.resolution = res
         f.active_res = res
         self._transmit(f, pc, seq, attempt=1, now=now)
@@ -415,6 +561,7 @@ class FetchController:
                                            t_start, t))
         st.in_flight[attempt] = handle
         st.timer_attempt = attempt
+        st.last_submit = t_start
         deadline = t_start + self._rto(f, nbytes, st.fires)
         self._push(deadline,
                    lambda t, f=f, pc=pc, seq=seq, attempt=attempt:
@@ -423,7 +570,13 @@ class FetchController:
     def _rto(self, f: ActiveFetch, nbytes: float, fires: int) -> float:
         """Retransmit deadline offset for the next attempt of a chunk of
         ``nbytes`` bytes, after ``fires`` consecutive timer fires (each
-        fire doubles the deadline — classic exponential backoff)."""
+        fire doubles the deadline — classic exponential backoff).  For
+        the flow's *tail* chunk — nothing left unsent, so no later
+        delivery will ever reveal its loss to ``_fast_retransmit`` — the
+        adaptive deadline tightens to a TLP-style probe (~2x srtt beyond
+        the projected service time, RFC 8985): a tail loss otherwise
+        idles for the full jitter-padded RTO at the worst possible
+        moment, right before the fetch completes."""
         cfg = self.config
         expected = nbytes / max(f.est.est, 1.0)  # projected service time
         if f.est_samples == 0:
@@ -440,6 +593,10 @@ class FetchController:
                 # no service-time sample yet: seed conservatively, like
                 # TCP's large initial RTO (3x the projected wire time)
                 base = 3.0 * expected + cfg.retransmit_timeout
+            elif (cfg.fast_retransmit and f.rtt.srtt is not None
+                    and f.plan.next_to_send >= len(f.plan.chunks)):
+                base = min(base, max(expected, f.rtt.srtt)
+                           + 2.0 * f.rtt.srtt)  # tail loss probe
         else:
             base = expected + cfg.retransmit_timeout
         # never cap below the base: a deadline ahead of the *projected*
@@ -524,6 +681,10 @@ class FetchController:
                     del st.pending_dups[r]
             f.retransmits += genuine
             self.retransmits_total += genuine
+            # a confirmed drop is a share-collapse signal: down-switch
+            # the remaining chunks now (the goodput estimator only sees
+            # the burst when the retransmitted chunk finally lands)
+            self._reconsider(f, now, "loss")
             self._maybe_dead(f, pc, seq, st, now)
             return
         # landed: the first delivered copy wins
@@ -547,7 +708,40 @@ class FetchController:
         # -> landing), so the estimate degrades under loss/contention
         f.est.observe(int(nbytes), now - pc.t_transmit_start)
         f.est_samples += 1
+        if hasattr(f.link, "flow_share"):
+            # the sample embodies the share the flow held while this
+            # chunk was on the wire; selection rescales by the ratio of
+            # the *current* share to this one (see _sel_bw)
+            f.est_share = f.link.flow_share(f.req.rid)
+        if self.config.fast_retransmit:
+            self._fast_retransmit(f, t_start, now)
         self._on_transmitted(f, pc, nbytes, pc.t_transmit_start, now)
+
+    def _fast_retransmit(self, f: ActiveFetch, acked_submit: float,
+                         now: float) -> None:
+        """RACK-style loss recovery: this delivery acks a chunk submitted
+        at ``acked_submit``, so any earlier-submitted chunk whose every
+        copy is already known lost has a confirmed sequence gap — resend
+        it now instead of waiting for its (possibly backed-off) RTO
+        timer.  Only fires on confirmed-loss state (``in_flight`` empty),
+        so the resend is always a genuine retransmit, never spurious."""
+        for seq in sorted(f.pending_retx):
+            st = f.tx.get(seq)
+            pc = f.plan.chunks[seq]
+            if (st is None or st.in_flight
+                    or pc.t_transmit_done is not None
+                    or st.last_submit >= acked_submit):
+                continue
+            nxt = pc.attempts + 1
+            if (nxt > self.config.max_attempts
+                    and not f.req.early_admitted):
+                continue  # cap exhausted: the abort path owns this chunk
+            # the delivery is fresh evidence the path is alive: the
+            # resend's timer restarts from the un-backed-off RTO
+            st.fires = 0
+            f.retransmits += 1
+            self.retransmits_total += 1
+            self._transmit(f, pc, seq, nxt, now)
 
     def _maybe_dead(self, f: ActiveFetch, pc: PlannedChunk, seq: int,
                     st: _ChunkTx, now: float) -> None:
@@ -571,7 +765,7 @@ class FetchController:
             st.in_flight.clear()
             st.pending_dups.clear()
         self.active.pop(f.req.rid, None)
-        f.link.close_flow(f.req.rid)
+        f.link.close_flow(f.req.rid, now)
         self.sched.notify_fetch_miss(f.req, now)
 
     def _on_transmitted(self, f: ActiveFetch, pc: PlannedChunk,
@@ -612,10 +806,20 @@ class FetchController:
     def _finish(self, f: ActiveFetch, now: float) -> None:
         f.req.layers_ready = f.plan.layers_ready()
         self.active.pop(f.req.rid, None)
-        f.link.close_flow(f.req.rid)
+        f.link.close_flow(f.req.rid, now)
         if self.rtt_sink is not None and f.rtt.srtt is not None \
                 and f.req.storage_node:
             self.rtt_sink(f.req.storage_node, f.rtt.srtt)
+        if self.res_sink is not None and f.served_key:
+            # report which encoded rungs this fetch actually used, in
+            # ladder order (deterministic): cost-aware per-resolution
+            # eviction keeps hot rungs and sheds cold ones
+            used = {pc.resolution for pc in f.plan.chunks
+                    if pc.resolution}
+            for r in sorted(used, key=lambda r: (
+                    RESOLUTION_ORDER.index(r)
+                    if r in RESOLUTION_ORDER else -1)):
+                self.res_sink(f.req.storage_node or "", f.served_key, r)
         self.sched.notify_fetch_done(f.req, now)
 
     # -- Appx A.3 layer-wise early admission --------------------------------
@@ -635,7 +839,7 @@ class FetchController:
         plan = f.plan
         pc = plan.chunks[min(plan.next_to_send, len(plan.chunks) - 1)]
         res = pc.resolution or f.active_res or self.config.fixed_resolution
-        avail = self._available_res(pc)
+        avail = self._available_res(f, pc)
         if avail and res not in avail:
             res = avail[0]
         nbytes = self._chunk_bytes(f, pc, res)

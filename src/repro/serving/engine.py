@@ -117,6 +117,15 @@ class LiveEngine:
                  link_ramp: Optional[str] = None,  # None -> "instant"
                  rto_mode: str = "adaptive",  # or "fixed" (baseline)
                  use_table_sizes: bool = False,  # model Appx A.2 sizes
+                 # ABR selection: None keeps the legacy rule (adaptive
+                 # iff a decode table is given); False pins
+                 # ``resolution`` even with a table (the fixed-res
+                 # baseline the ttft.abr.* rows compare against)
+                 adaptive: Optional[bool] = None,
+                 # ladder the selector may pick from (None = the full
+                 # RESOLUTION_ORDER; narrow it to the registered
+                 # manifest ladder for cross-env determinism tests)
+                 resolutions: Optional[Tuple[str, ...]] = None,
                  decode_table: Optional[DecodeTable] = None,
                  cost: Optional[EngineCostModel] = None,
                  # speculative prefetch + host staging tier: a
@@ -165,22 +174,28 @@ class LiveEngine:
             # model the simulator pumps
             link = make_link(bandwidth, policy=link_policy, loss=loss,
                              ramp=link_ramp)
+            pipe_kw = {}
+            if resolutions is not None:
+                pipe_kw["resolutions"] = tuple(resolutions)
             self.ctrl = FetchController(
                 self.sched, link, table=decode_table, pool=pool,
                 config=PipelineConfig(
-                    adaptive=decode_table is not None,
+                    adaptive=(decode_table is not None if adaptive is None
+                              else adaptive),
                     fixed_resolution=resolution,
                     pipelined=fetch_mode == "async",
                     layerwise_admission=(fetch_mode == "async"
                                          and policy == "kvfetcher"),
                     use_table_sizes=use_table_sizes,
-                    rto_mode=rto_mode),
+                    rto_mode=rto_mode, **pipe_kw),
                 hooks=_EngineHooks(self), prefetcher=prefetch)
             if isinstance(store, StorageCluster):
                 # heal="link" re-replication transfers share the
                 # controller's virtual clock + the nodes' links
                 store.bind(self.ctrl.push_event)
                 self.ctrl.rtt_sink = store.observe_rtt
+                # per-resolution usage feedback for rung-level eviction
+                self.ctrl.res_sink = store.note_resolution_use
             if prefetch is not None:
                 prefetch.bind(self.ctrl.push_event)
         elif prefetch is not None:
@@ -229,6 +244,8 @@ class LiveEngine:
         tokens, just more compute), and a **miss** falls back to a plain
         full prefill; fetches route over the serving node's own link."""
         link = None
+        res_avail = None
+        served_key = None
         if isinstance(self.store, StorageCluster):
             tokens = self.prompts[req.rid][:req.reuse_tokens]
             staged = (self.prefetch.host_lookup_tokens(tokens, self.now())
@@ -261,6 +278,8 @@ class LiveEngine:
                     req.prefix = hit.entry.key  # fetch the ancestor
                 man = hit.entry.manifest
                 link = hit.node.link
+                res_avail = hit.resolutions
+                served_key = hit.entry.key
         else:
             man = self.store.lookup(req.prefix)
         assert man is not None, f"prefix {req.prefix} not registered"
@@ -269,7 +288,8 @@ class LiveEngine:
         if self.ctrl is None:
             self._run_fetch_wall(req, plan)
             return
-        self.ctrl.start(req, plan, self.now(), link=link)
+        self.ctrl.start(req, plan, self.now(), link=link,
+                        resolutions=res_avail, served_key=served_key)
         if self.fetch_mode == "sync":
             # blocking baseline: the engine idles until the (serialized)
             # pipeline finishes; the virtual clock absorbs the whole fetch

@@ -1,0 +1,329 @@
+"""ABR adaptive resolution selection (ISSUE 7).
+
+Three layers:
+
+  * property tests of Alg. 1 `select_resolution` under the ABR objective
+    (minimum total pipelined time) against a brute-force argmin oracle,
+    over randomized bandwidth / decode-table / chunk-size inputs — run
+    through the offline `_hypothesis_compat` seed bank;
+  * controller-level unit tests of the mid-fetch down-switch machinery:
+    flow join, slow-start ramp epoch, and confirmed-loss collapse each
+    emit a deterministic ``resolution_switch`` event and re-aim only the
+    *remaining* chunks (retransmits keep their chosen blob; up-switches
+    wait for a chunk boundary);
+  * a cross-environment determinism test (slow): a scripted mid-fetch
+    bandwidth collapse (flow join + correlated GE loss burst) replays
+    the identical ``resolution_switch`` sequence through the analytic
+    simulator and the virtual-clock live engine.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.adaptive import (GBPS, H20_TABLE, DecodeTable,
+                                 pipelined_time, select_resolution)
+from repro.core.fetch import synthetic_plan
+from repro.core.fetch_controller import (FetchController, FetchHooks,
+                                         PipelineConfig)
+from repro.core.layout import RESOLUTION_ORDER
+from repro.core.scheduler import FetchingAwareScheduler, Request
+from repro.cluster.decodepool import DecodePool
+from repro.cluster.network import BandwidthTrace, LossModel, make_link
+
+ORDER = list(RESOLUTION_ORDER)
+
+#: toy ladder over a 75 kB/s link (trace 0.0006 Gbps): at full share
+#: 1080p wins (decode-bound, 0.0533s), at half share 240p wins
+#: (0.06s + 0.01 switch < 0.1067s) — the knife edge every down-switch
+#: test sits on.  n_decoders=1 pins the selector's pool-drain model to
+#: the plain serial latencies, so the thresholds above are exact.
+TOY = DecodeTable(
+    name="abr-toy", n_decoders=1,
+    latency={"240p": (0.06,), "480p": (0.055,), "1080p": (0.03,)},
+    penalty={"240p": 0.01, "480p": 0.008, "1080p": 0.0},
+    chunk_size_mb={"240p": 0.002, "480p": 0.0035, "1080p": 0.004})
+
+TOY_RES = ("240p", "480p", "1080p")
+TRACE_GBPS = 0.0006  # 75 kB/s
+
+
+def _rand_table(lats, pens, sizes_mb):
+    return DecodeTable(
+        name="rand", n_decoders=8,
+        latency={r: (lat,) for r, lat in zip(ORDER, lats)},
+        penalty=dict(zip(ORDER, pens)),
+        chunk_size_mb=dict(zip(ORDER, sizes_mb)))
+
+
+# ---------------------------------------------------------------------------
+# Alg. 1 property tests: brute-force argmin oracle
+# ---------------------------------------------------------------------------
+
+@given(st.floats(0.05, 100.0), st.integers(0, 7),
+       st.lists(st.floats(0.01, 2.0), min_size=4, max_size=4),
+       st.lists(st.floats(0.0, 0.2), min_size=4, max_size=4),
+       st.lists(st.floats(1.0, 400.0), min_size=4, max_size=4))
+@settings(max_examples=40, deadline=None)
+def test_select_matches_bruteforce_argmin(gbps, load, lats, pens, sizes_mb):
+    """The chosen resolution is always the brute-force argmin of total
+    pipelined time (first wins on exact ties), with or without an
+    active resolution charging switch penalties."""
+    table = _rand_table(lats, pens, sizes_mb)
+    for active in (None,) + tuple(ORDER):
+        res, t = select_resolution(gbps * GBPS, load, table,
+                                   active_resolution=active)
+        times = [pipelined_time(gbps * GBPS, load, table, r,
+                                active_resolution=active) for r in ORDER]
+        best_t = min(times)
+        brute = ORDER[times.index(best_t)]  # first wins on ties
+        assert res == brute, (res, brute, times)
+        assert t == pytest.approx(best_t)
+
+
+@given(st.floats(0.05, 100.0), st.integers(0, 7),
+       st.sampled_from(ORDER),
+       st.lists(st.floats(0.01, 2.0), min_size=4, max_size=4),
+       st.lists(st.floats(0.0, 0.2), min_size=4, max_size=4),
+       st.lists(st.floats(1.0, 400.0), min_size=4, max_size=4))
+@settings(max_examples=40, deadline=None)
+def test_switch_penalty_never_beats_staying(gbps, load, active, lats,
+                                            pens, sizes_mb):
+    """The sticky selection is sane: its total is never worse than just
+    staying on ``active`` (staying is penalty-free and always a
+    candidate), and never worse than the penalty-blind oracle's pick
+    plus the switch penalty that pick would actually cost."""
+    table = _rand_table(lats, pens, sizes_mb)
+    res, t = select_resolution(gbps * GBPS, load, table,
+                               active_resolution=active)
+    stay = pipelined_time(gbps * GBPS, load, table, active,
+                          active_resolution=active)
+    assert t <= stay + 1e-9
+    oracle, t_oracle = select_resolution(gbps * GBPS, load, table)
+    pen = table.penalty[oracle] if oracle != active else 0.0
+    assert t <= t_oracle + pen + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# controller: mid-fetch down-switching
+# ---------------------------------------------------------------------------
+
+def _abr_setup(*, loss=None, ramp=None, reuse=30_000, link=None):
+    """One adaptive fetch over the toy ladder on a 75 kB/s link."""
+    sched = FetchingAwareScheduler("kvfetcher", max_running=4)
+    req = Request(rid=0, arrival=0.0, prompt_len=reuse + 2_000,
+                  reuse_tokens=reuse, prefix="p")
+    sched.submit(req, 0.0)
+    sched.schedule(0.0)
+    (fr,) = sched.take_fetches()
+    lnk = link if link is not None else make_link(
+        BandwidthTrace.constant(TRACE_GBPS), loss=loss, ramp=ramp)
+    ctrl = FetchController(
+        sched, lnk, table=TOY, pool=DecodePool(TOY),
+        config=PipelineConfig(adaptive=True, use_table_sizes=True,
+                              resolutions=TOY_RES,
+                              layerwise_admission=False))
+    plan = synthetic_plan(0, reuse, 9, 10_000)
+    return sched, fr, plan, ctrl, lnk
+
+
+def _down(ev):
+    return ORDER.index(ev[3]) < ORDER.index(ev[2])
+
+
+def test_flow_join_downswitches_remaining_chunks():
+    sched, req, plan, ctrl, link = _abr_setup()
+
+    def join(t):
+        link.open_flow(-5, t=t)
+        # the joiner actually transmits, so it holds its half for the
+        # rest of the fetch (an idle flow would leave the wire alone)
+        link.submit(-5, 5_000_000, t, lambda tt: None)
+
+    ctrl.push_event(0.3, join)
+    ctrl.start(req, plan, 0.0)
+    ctrl.pump(float("inf"))
+    assert plan.done and req.fetch_done is not None
+    joins = [ev for ev in ctrl.resolution_switches if ev[4] == "flow_join"]
+    assert joins and all(_down(ev) for ev in joins), \
+        ctrl.resolution_switches
+    rid, seq, frm, to, _ = joins[0]
+    assert (rid, frm, to) == (0, "1080p", "240p")
+    # chunks sent before the collapse carry the high rung; everything
+    # from the switch point on was re-aimed at the low one
+    assert plan.chunks[0].resolution == "1080p"
+    assert all(pc.resolution == "240p" for pc in plan.chunks[seq:])
+    # the per-fetch log mirrors the controller-global one
+    assert ctrl.active == {}
+    assert joins[0] in ctrl.resolution_switches
+
+
+def test_confirmed_loss_downswitches_but_retransmit_keeps_blob():
+    """A confirmed drop is a collapse signal: the remaining chunks
+    down-switch (reason "loss") while the dropped chunk's retransmit
+    resends the blob already chosen — the resolution decision happened
+    at first send."""
+    loss = LossModel.scripted({(0, 2, 1)})
+    sched, req, plan, ctrl, link = _abr_setup(loss=loss, reuse=10_000)
+    ctrl.start(req, plan, 0.0)
+    ctrl.pump(float("inf"))
+    assert plan.done and req.fetch_done is not None
+    assert ctrl.retransmits_total == 1
+    losses = [ev for ev in ctrl.resolution_switches if ev[4] == "loss"]
+    assert losses and all(_down(ev) for ev in losses)
+    # the dropped chunk itself was chosen at 1080p and retransmitted
+    # at 1080p (attempts=2), never re-encoded mid-flight
+    assert plan.chunks[2].attempts == 2
+    assert plan.chunks[2].resolution == "1080p"
+    # chunks planned after the collapse ride the down-switched rung
+    seq = losses[0][1]
+    assert plan.chunks[seq].resolution == "240p"
+
+
+def test_ramp_epoch_downswitches_incumbent():
+    """On a slow-start link the incumbent climbs the ladder as its own
+    ramp opens ("estimate" up-switch at a chunk boundary), then a
+    slow-start joiner's ramp epochs erode its share step by step
+    (0.9375 -> 0.875 -> 0.75 -> 0.5 of the link): each epoch that
+    crosses a knife edge emits a deterministic "ramp_epoch"
+    down-switch, staging the flow back down the ladder."""
+    link = make_link(BandwidthTrace.constant(TRACE_GBPS), ramp="slowstart")
+    # long fetch: the joiner's ramp doubles every 0.5s, so the fetch
+    # must still be in flight when the eroding epochs fire
+    sched, req, plan, ctrl, link = _abr_setup(link=link, reuse=150_000)
+
+    def join(t):
+        link.open_flow(-5, t=t)
+        link.submit(-5, 5_000_000, t, lambda tt: None)
+
+    # join after the incumbent has fully ramped and up-switched
+    ctrl.push_event(2.0, join)
+    ctrl.start(req, plan, 0.0)
+    ctrl.pump(float("inf"))
+    assert plan.done and req.fetch_done is not None
+    ramps = [ev for ev in ctrl.resolution_switches
+             if ev[4] == "ramp_epoch"]
+    assert ramps and all(_down(ev) for ev in ramps), \
+        ctrl.resolution_switches
+    # the join itself only cost ramp_init/2 of the share — not enough
+    # to switch; the collapse came from the later ramp epochs
+    assert not [ev for ev in ctrl.resolution_switches
+                if ev[4] == "flow_join"]
+    # the incumbent's own ramp produced a boundary up-switch first
+    ups = [ev for ev in ctrl.resolution_switches if not _down(ev)]
+    assert ups and all(ev[4] == "estimate" for ev in ups)
+    # staged collapse ends on the lowest rung
+    assert plan.chunks[-1].resolution == "240p"
+
+
+def test_upswitch_waits_for_chunk_boundary():
+    """Share recovery (the contending flow leaves) never interrupts the
+    remaining chunks mid-flight: the up-switch happens at a later chunk
+    boundary as a plain "estimate" re-selection, once the smoothed
+    service-time view has caught up with the freed link."""
+    link = make_link(BandwidthTrace.constant(TRACE_GBPS))
+    # controller first: it binds the link's event queue; then the
+    # contending flow claims its half before the fetch starts
+    sched, req, plan, ctrl, link = _abr_setup(link=link, reuse=60_000)
+    link.open_flow(-5, t=0.0)
+    link.submit(-5, 7_000, 0.0, lambda t: link.close_flow(-5, t))
+    ctrl.start(req, plan, 0.0)
+    ctrl.pump(float("inf"))
+    assert plan.done and req.fetch_done is not None
+    # contended start: the first chunk went out on the low rung
+    assert plan.chunks[0].resolution == "240p"
+    ups = [ev for ev in ctrl.resolution_switches if not _down(ev)]
+    assert ups, ctrl.resolution_switches
+    assert all(ev[4] == "estimate" for ev in ups)
+    # structural signals only ever produce down-switches
+    assert all(_down(ev) for ev in ctrl.resolution_switches
+               if ev[4] != "estimate")
+    # the fetch ends back on the high rung
+    assert plan.chunks[-1].resolution == "1080p"
+
+
+def test_start_resolutions_restricts_selection():
+    """``start(resolutions=...)`` (the storage tier's resident-rung set)
+    caps the ladder: with only 240p resident, every chunk ships 240p
+    even though the link would carry 1080p."""
+    sched, req, plan, ctrl, _ = _abr_setup(reuse=10_000)
+    ctrl.start(req, plan, 0.0, resolutions=("240p",))
+    ctrl.pump(float("inf"))
+    assert plan.done
+    assert all(pc.resolution == "240p" for pc in plan.chunks)
+    assert not ctrl.resolution_switches
+
+
+# ---------------------------------------------------------------------------
+# cross-environment determinism (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_resolution_switches_identical_in_simulator_and_live_engine(
+        tiny_cfg, tiny_params, registered_store):
+    """ISSUE 7 acceptance: a scripted mid-fetch bandwidth collapse —
+    a flow joining the link at t=0.15 plus a correlated Gilbert-Elliott
+    loss burst — produces the *identical* ``resolution_switch`` event
+    sequence in the analytic simulator and the virtual-clock live
+    engine.  Both model Appx A.2-style table chunk sizes over the same
+    link (``use_table_sizes``), making their wire timelines
+    byte-identical; every selection input (SRTT service times, link
+    share, outstanding losses, pool load) is then a pure function of
+    those timings, so the timestamp-free event tuples must match."""
+    from repro.cluster.simulator import MethodSpec, ServingSimulator
+    from repro.serving.engine import LiveEngine
+
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, tiny_cfg.vocab_size, 48)
+    full = np.concatenate([prefix, rng.integers(0, tiny_cfg.vocab_size, 8)])
+    store, key = registered_store(prefix, tokens_per_chunk=16,
+                                  resolutions=TOY_RES)
+    table = DecodeTable(
+        name="abr-xenv", n_decoders=1,
+        latency=TOY.latency, penalty=TOY.penalty,
+        chunk_size_mb=TOY.chunk_size_mb)
+    trace = BandwidthTrace.constant(TRACE_GBPS)
+
+    def corr():
+        return LossModel.correlated(seed=31, slot=0.08, good_to_bad=0.35,
+                                    bad_to_good=0.4, p_good=0.0,
+                                    p_bad=0.85)
+
+    def scripted_join(ctrl):
+        link = ctrl.link
+
+        def join(t):
+            link.open_flow(-5, t=t)
+            link.submit(-5, 50_000, t, lambda tt: None)
+
+        ctrl.push_event(0.15, join)
+
+    eng = LiveEngine(tiny_params, tiny_cfg, store, policy="kvfetcher",
+                     fetch_mode="async", bandwidth=trace, loss=corr(),
+                     decode_table=table, use_table_sizes=True,
+                     resolution="240p", resolutions=TOY_RES)
+    scripted_join(eng.ctrl)
+    r = eng.submit(full, reuse_prefix=key, reuse_tokens=48,
+                   max_new_tokens=2)
+    eng.run()
+    assert r.rid == 0 and r.fetch_done is not None
+
+    spec = MethodSpec("kvfetcher", ratios={"stream": 8.0}, adaptive=True,
+                      uses_decode_pool=True, use_table_sizes=True,
+                      layerwise_admission=True, resolutions=TOY_RES)
+    sim = ServingSimulator(tiny_cfg, spec, bandwidth=trace, loss=corr(),
+                           table=table, chunk_tokens=16)
+    scripted_join(sim.ctrl)
+    req = Request(rid=0, arrival=0.0, prompt_len=56, reuse_tokens=48,
+                  prefix="p")
+    res = sim.run([req], max_new_tokens=2)
+    assert req.fetch_done is not None
+
+    assert eng.ctrl.resolution_switches, \
+        "the collapse never produced a switch; test is vacuous"
+    assert eng.ctrl.resolution_switches == sim.ctrl.resolution_switches
+    assert res.resolution_switches == sim.ctrl.resolution_switches
+    # the scripted collapse shows up as structural down-switches
+    structural = [ev for ev in eng.ctrl.resolution_switches
+                  if ev[4] in ("flow_join", "loss", "ramp_epoch")]
+    assert structural and all(_down(ev) for ev in structural)

@@ -155,3 +155,61 @@ def test_committed_baselines_cover_current_bench_rows():
                for k in data["rows"])
     assert any("failover" in k for k in data["rows"]), \
         "failover ratios must be gated"
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 7 regression: missing/malformed gated rows must fail loudly
+# ---------------------------------------------------------------------------
+
+def test_malformed_gated_row_no_longer_silently_ungates(tmp_path, capsys):
+    """Failing-before regression: a truncated data row (comma present,
+    derived column missing) used to be skipped by parse_csv, so a gated
+    ``ttft.abr.*`` ratio could vanish from the gate and the job stayed
+    green (exit 0).  It must fail and name the row."""
+    cb = _check_bench()
+    csv = tmp_path / "t.csv"
+    csv.write_text(CSV_OK + "ttft.abr.speedup_adaptive_vs_best_fixed,3.0\n")
+    base = _baselines(tmp_path, {
+        "ttft.live.speedup_async_vs_sync": 1.60,
+        "ttft.storage.speedup_cost_vs_lru": 1.17,
+    })
+    assert cb.main([str(csv), "--baselines", str(base)]) == 1
+    err = capsys.readouterr().err
+    assert "ttft.abr.speedup_adaptive_vs_best_fixed" in err
+    assert "malformed" in err
+    # the old silent path really was silent: parse_csv alone shows it
+    rows, failed = cb.parse_csv(csv)
+    assert "ttft.abr.speedup_adaptive_vs_best_fixed" not in rows
+    assert any("malformed" in f for f in failed)
+    # prose lines without a comma are still not data rows
+    (tmp_path / "p.csv").write_text("bench done\n" + CSV_OK)
+    rows2, failed2 = cb.parse_csv(tmp_path / "p.csv")
+    assert not failed2 and rows2 == rows
+
+
+def test_missing_baseline_message_names_rows_and_update_command(
+        tmp_path, capsys):
+    """New gated rows without baselines fail with ONE aggregated,
+    actionable message: every missing ``ttft.abr.*`` row by name plus
+    the exact --update command — distinct from a [REGRESSED] verdict."""
+    cb = _check_bench()
+    csv = tmp_path / "t.csv"
+    csv.write_text(
+        CSV_OK
+        + "ttft.abr.speedup_adaptive_vs_best_fixed,0.0,1.08\n"
+        + "ttft.abr.speedup_adaptive_vs_worst_fixed,0.0,1.90\n")
+    base = _baselines(tmp_path, {
+        "ttft.live.speedup_async_vs_sync": 1.60,
+        "ttft.storage.speedup_cost_vs_lru": 1.17,
+    })
+    assert cb.main([str(csv), "--baselines", str(base)]) == 1
+    out, err = capsys.readouterr()
+    assert "REGRESSED" not in out and "REGRESSED" not in err
+    assert "2 gated row(s) have no baseline" in err
+    assert "ttft.abr.speedup_adaptive_vs_best_fixed" in err
+    assert "ttft.abr.speedup_adaptive_vs_worst_fixed" in err
+    assert f"python tools/check_bench.py {csv} --update" in err
+    # refusing to --update over a malformed CSV still holds
+    csv.write_text(CSV_OK + "ttft.abr.speedup_adaptive_vs_best_fixed,1\n")
+    assert cb.main([str(csv), "--baselines", str(base),
+                    "--update"]) == 1

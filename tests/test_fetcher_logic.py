@@ -6,7 +6,8 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.adaptive import (
-    GBPS, H20_TABLE, L20_TABLE, BandwidthEstimator, select_resolution,
+    GBPS, H20_TABLE, L20_TABLE, BandwidthEstimator, pipelined_time,
+    select_resolution,
 )
 from repro.core.chunks import (
     decode_chunk_tokens, decode_state_snapshot, encode_prefix,
@@ -31,13 +32,17 @@ def test_adaptive_prefers_low_res_on_slow_network():
 
 def test_adaptive_paper_example_fig17():
     """Paper Fig.17: at ~3 Gbps with the H20 table the adapter picks 240p;
-    when bandwidth recovers it moves to a higher resolution."""
+    when bandwidth recovers it moves to a higher resolution.  (Under the
+    ABR objective with the pool-drain decode model the recovery point is
+    ~24 Gbps — below that the 7-decoder pool drains any rung faster than
+    the wire delivers it, so transmit binds and 240p's smaller chunks
+    stay cheapest; 40 Gbps recovers to 1080p with margin.)"""
     r3, _ = select_resolution(3 * GBPS, 0, H20_TABLE,
                               active_resolution="1080p")
-    r6, _ = select_resolution(6 * GBPS, 0, H20_TABLE,
-                              active_resolution=r3)
+    r40, _ = select_resolution(40 * GBPS, 0, H20_TABLE,
+                               active_resolution=r3)
     order = ["240p", "480p", "640p", "1080p"]
-    assert order.index(r3) < order.index(r6)
+    assert order.index(r3) < order.index(r40)
 
 
 def test_adaptive_accounts_for_pool_load():
@@ -50,12 +55,15 @@ def test_adaptive_accounts_for_pool_load():
 
 @given(st.floats(0.5, 100), st.integers(0, 6))
 @settings(max_examples=50, deadline=None)
-def test_adaptive_returns_min_bubble(gbps, load):
-    res, bubble = select_resolution(gbps * GBPS, load, H20_TABLE)
+def test_adaptive_returns_min_total_time(gbps, load):
+    """ABR objective (ISSUE 7): the winner's total pipelined time
+    max(transmit, decode) is minimal over the whole ladder."""
+    res, t_best = select_resolution(gbps * GBPS, load, H20_TABLE)
+    assert t_best == pytest.approx(
+        pipelined_time(gbps * GBPS, load, H20_TABLE, res))
     for r in H20_TABLE.latency:
-        size = H20_TABLE.chunk_size_mb[r] * 1e6
-        alt = abs(size / (gbps * GBPS) - H20_TABLE.decode_latency(r, load + 1))
-        assert bubble <= alt + 1e-9
+        assert t_best <= pipelined_time(gbps * GBPS, load,
+                                        H20_TABLE, r) + 1e-9
 
 
 def test_bandwidth_estimator():

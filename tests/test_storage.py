@@ -1068,3 +1068,90 @@ def test_cross_env_churn_fail_heal_expire_reject_agree(tiny_cfg,
     assert ("rebalance", keys[1], sim_holder) in sim_cluster.events
     assert sum(n.contains(keys[1]) for n in live.nodes) == 1
     assert live.primary_node(keys[1]).contains(keys[1])
+
+
+# ---------------------------------------------------------------------------
+# per-resolution eviction (ISSUE 7): a StoredPrefix holds multiple encoded
+# resolutions and capacity pressure evicts cold rungs, not whole prefixes
+# ---------------------------------------------------------------------------
+
+def _ladder(key, rungs, parent=None):
+    return StoredPrefix(key=key, n_tokens=1000, bytes_by_resolution=rungs,
+                        raw_kv_bytes=8 * sum(rungs.values()), parent=parent)
+
+
+def test_resolution_granularity_evicts_cold_rung_keeps_prefix():
+    n = StorageNode("n0", capacity_bytes=50 * MB, policy="lru",
+                    evict_granularity="resolution")
+    n.put(_ladder("a", {"240p": 10 * MB, "1080p": 30 * MB}), 0.0)
+    n.note_resolution_use("a", "1080p")  # the rung the fetch path uses
+    ok, evicted = n.put(_ladder("b", {"240p": 15 * MB}), 1.0)
+    assert ok and evicted == ["a/240p"]  # cold rung goes, prefix stays
+    assert n.contains("a")
+    assert n.resident_resolutions("a") == ("1080p",)
+    assert n.used_bytes == 45 * MB
+    assert n.bytes_by_resolution["240p"] == 15 * MB
+
+
+def test_resolution_granularity_last_rung_drops_whole_prefix():
+    n = StorageNode("n0", capacity_bytes=40 * MB,
+                    evict_granularity="resolution")
+    n.put(_ladder("a", {"1080p": 30 * MB}), 0.0)
+    ok, evicted = n.put(_ladder("b", {"240p": 20 * MB}), 1.0)
+    assert ok and evicted == ["a"]  # plain key: the whole prefix went
+    assert not n.contains("a")
+    assert n.resident_resolutions("a") is None
+
+
+def test_note_resolution_use_steers_lfu_victim():
+    """Per-rung frequency from the fetch path decides which rung
+    survives: the rung the adaptive selector keeps delivering outlives
+    a bigger, barely-used one."""
+    n = StorageNode("n0", capacity_bytes=40 * MB, policy="lfu",
+                    evict_granularity="resolution")
+    n.put(_ladder("a", {"240p": 10 * MB, "1080p": 20 * MB}), 0.0)
+    for _ in range(3):
+        n.note_resolution_use("a", "240p")
+    n.note_resolution_use("a", "1080p")  # more recent but less frequent
+    _, evicted = n.put(_ladder("b", {"240p": 15 * MB}), 1.0)
+    assert evicted == ["a/1080p"]
+    assert n.resident_resolutions("a") == ("240p",)
+
+
+def test_readmission_restores_full_ladder_and_keeps_rung_history():
+    n = StorageNode("n0", capacity_bytes=50 * MB,
+                    evict_granularity="resolution")
+    e = _ladder("a", {"240p": 10 * MB, "1080p": 30 * MB})
+    n.put(e, 0.0)
+    n.note_resolution_use("a", "1080p")
+    n.put(_ladder("b", {"240p": 15 * MB}), 1.0)  # evicts a/240p
+    assert n.resident_resolutions("a") == ("1080p",)
+    n.put(_ladder("x", {"240p": 1 * MB}), 1.5)  # headroom stays
+    ok, evicted = n.put(e, 2.0)  # re-register: the 240p rung returns
+    # cold single-rung "b" (oldest untouched) is the victim, and losing
+    # its last rung drops the whole prefix
+    assert ok and evicted == ["b"]
+    assert n.resident_resolutions("a") == ("240p", "1080p")
+    assert n.residents["a"].res_hits == {"1080p": 1}  # history kept
+
+
+def test_cluster_rung_eviction_narrows_hit_resolutions():
+    """The surviving rung set travels on StorageHit.resolutions (the
+    fetch controller caps its ladder with it), and rung evictions are
+    logged as distinct `evict_res` events."""
+    node = StorageNode("n0", capacity_bytes=50 * MB, policy="lru",
+                       evict_granularity="resolution")
+    c = StorageCluster([node])
+    c.register(_ladder("a", {"240p": 10 * MB, "1080p": 30 * MB}), 0.0)
+    hit = c.lookup("a", 1.0)
+    assert hit.kind == "full"
+    assert hit.resolutions == ("240p", "1080p")  # ladder order
+    c.note_resolution_use("n0", "a", "1080p")  # res_sink feedback
+    c.register(_ladder("b", {"240p": 15 * MB}), 2.0)
+    assert ("evict_res", "a/240p", "n0") in c.events
+    assert not any(ev[0] == "evict" for ev in c.events)
+    hit = c.lookup("a", 3.0)
+    assert hit.kind == "full" and hit.resolutions == ("1080p",)
+    # dead-node / unknown-key feedback is a safe no-op
+    c.note_resolution_use("n9", "a", "1080p")
+    c.note_resolution_use("n0", "nope", "1080p")

@@ -20,7 +20,11 @@ Rules
 * gated rows are those whose name contains ``speedup`` or ``retained``
   (ratios where bigger is better; raw TTFT seconds are machine-speed
   dependent and are NOT gated — only ratios are stable across runners)
-* a gated row in the CSV but not in the baselines fails (run --update)
+* a gated row in the CSV but not in the baselines fails, with one
+  aggregated message naming every missing row and the exact --update
+  command to refresh
+* a malformed data row (has a comma but fewer than 3 columns) fails —
+  silently skipping it would un-gate the ratio it carries
 * a baseline row missing from the CSV fails (a silently dropped
   comparison is a regression of the gate itself)
 * any ``<module>.FAILED`` row fails
@@ -50,7 +54,13 @@ def parse_csv(path: pathlib.Path) -> Tuple[Dict[str, float], List[str]]:
                 line.startswith("name,us_per_call"):
             continue
         parts = line.split(",")
+        if len(parts) == 1:
+            continue  # prose/log line, not a data row
         if len(parts) < 3:
+            # a comma means this was meant to be a data row; dropping it
+            # silently would un-gate the ratio it carries
+            failed.append(f"{parts[0]} (malformed row {line!r}: "
+                          f"expected name,us_per_call,derived)")
             continue
         name = parts[0]
         if name.endswith(".FAILED"):
@@ -108,10 +118,14 @@ def main(argv=None) -> int:
             problems.append(
                 f"{name}: {got:.4g} < {floor:.4g} "
                 f"(baseline {want:.4g} - {tol:.0%})")
-    for name in sorted(set(gate) - set(baseline_rows)):
+    missing = sorted(set(gate) - set(baseline_rows))
+    if missing:
+        names = ", ".join(missing)
         problems.append(
-            f"{name}: new gated row has no baseline "
-            f"(run tools/check_bench.py <csv> --update and commit)")
+            f"{len(missing)} gated row(s) have no baseline: {names}\n"
+            f"    -> refresh with: python tools/check_bench.py "
+            f"{args.csv} --update  (then commit "
+            f"{args.baselines.name})")
     if problems:
         print(f"\n{len(problems)} bench-gate failure(s):",
               file=sys.stderr)
