@@ -153,6 +153,12 @@ class SimResult:
     # cross-environment replay tests compare them directly
     resolution_switches: List[Tuple[int, int, str, str, str]] = \
         dataclasses.field(default_factory=list)
+    # user-level fairness decision log, in emission order:
+    # (user, rid, kind, milli-counter) — timestamp-free, byte-identical
+    # across environments for the same trace (docs/fairness.md); empty
+    # unless the simulator was built with fairness=
+    fairness_events: List[Tuple[str, int, str, int]] = \
+        dataclasses.field(default_factory=list)
 
     def fetching(self) -> List[Request]:
         return [r for r in self.requests if r.needs_fetch]
@@ -221,6 +227,10 @@ class ServingSimulator:
                  fail_at: Optional[List[Tuple[float, str]]] = None,
                  recover_at: Optional[List[Tuple[float, str]]] = None,
                  table: Optional[DecodeTable] = None,
+                 # user-level fair scheduling: a
+                 # repro.cluster.fairness.FairScheduler shared with the
+                 # FetchingAwareScheduler (docs/fairness.md)
+                 fairness=None,
                  chunk_tokens: int = 10_000,
                  prefill_chunk: int = 2048,
                  max_running: int = 8,
@@ -250,8 +260,10 @@ class ServingSimulator:
                                           method.uses_decode_pool) else None
         self.chunk_tokens = chunk_tokens
         self.prefill_chunk = prefill_chunk
+        self.fairness = fairness
         self.sched = FetchingAwareScheduler(
-            method.scheduler_policy, max_running=max_running)
+            method.scheduler_policy, max_running=max_running,
+            fairness=fairness)
         self.ctrl = FetchController(
             self.sched, self.link, table=table, pool=self.pool,
             config=PipelineConfig(
@@ -470,4 +482,7 @@ class ServingSimulator:
                          spurious_retransmits=(
                              self.ctrl.spurious_retransmits_total),
                          resolution_switches=(
-                             self.ctrl.resolution_switches))
+                             self.ctrl.resolution_switches),
+                         fairness_events=(
+                             list(self.fairness.events)
+                             if self.fairness is not None else []))

@@ -133,7 +133,14 @@ class PrefetchManager:
                  mispredict_budget_bytes: Optional[float] = None,
                  transport: str = "link", max_inflight: int = 2,
                  heat_threshold: float = 2.0,
-                 continuation_boost: float = 2.0):
+                 continuation_boost: float = 2.0,
+                 # user-level budget shares: with a
+                 # repro.cluster.fairness.FairScheduler attached, waste
+                 # is attributed to the prefix's demanding user and each
+                 # user may only burn budget * prefetch_share(user) —
+                 # one tenant's mispredictions cannot exhaust the
+                 # shared budget (docs/fairness.md)
+                 fairness=None):
         assert transport in ("link", "sync"), transport
         self.cluster = cluster
         self.staging = staging
@@ -144,9 +151,11 @@ class PrefetchManager:
         self.max_inflight = max_inflight
         self.heat_threshold = heat_threshold
         self.continuation_boost = continuation_boost
+        self.fairness = fairness
         self.heat: Dict[str, float] = {}
         self.events: List[Tuple[str, str]] = []
         self.wasted_bytes = 0.0
+        self.wasted_by_user: Dict[str, float] = {}
         self.prefetches_started = 0
         self.prefetches_committed = 0
         self.prefetches_cancelled = 0
@@ -244,7 +253,7 @@ class PrefetchManager:
         entry = self.cluster.catalog.get(key)
         if entry is None:
             return False
-        if self.wasted_bytes >= self.budget:
+        if self._over_budget(key):
             self.events.append(("budget_reject", key))
             return False
         holders = self.cluster._resident_nodes(key, now)
@@ -291,6 +300,26 @@ class PrefetchManager:
         else:
             self.events.append(("stage_reject", key))
 
+    def _over_budget(self, key: str) -> bool:
+        """Budget check for one more speculation on ``key``: global cap
+        without fairness; with a FairScheduler, the cap is the key's
+        demanding user's share of the budget (an unattributed key —
+        never demanded — falls back to the global check)."""
+        if self.fairness is not None:
+            user = self.fairness.prefix_user(key)
+            if user is not None:
+                cap = self.budget * self.fairness.prefetch_share(user)
+                return self.wasted_by_user.get(user, 0.0) >= cap
+        return self.wasted_bytes >= self.budget
+
+    def _account_waste(self, key: str, nbytes: float) -> None:
+        self.wasted_bytes += nbytes
+        if self.fairness is not None:
+            user = self.fairness.prefix_user(key)
+            if user is not None:
+                self.wasted_by_user[user] = \
+                    self.wasted_by_user.get(user, 0.0) + nbytes
+
     def _charge_waste(self, key: str) -> None:
         """A staged entry left the tier: free if it earned a host hit,
         otherwise its stored bytes count against the budget."""
@@ -299,7 +328,7 @@ class PrefetchManager:
             return
         e = self.cluster.catalog.get(key)
         if e is not None:
-            self.wasted_bytes += float(e.stored_bytes)
+            self._account_waste(key, float(e.stored_bytes))
 
     # -- demand pressure ------------------------------------------------------
     def demand_started(self, req, link, now: float) -> None:
@@ -317,7 +346,7 @@ class PrefetchManager:
             link.close_flow(spec.flow)
             sent = spec.nbytes - max(
                 getattr(spec.handle, "left", spec.nbytes), 0.0)
-            self.wasted_bytes += sent
+            self._account_waste(key, sent)
             self.prefetches_cancelled += 1
             self.events.append(("prefetch_cancel", key))
             del self._inflight[key]

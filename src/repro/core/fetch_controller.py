@@ -766,6 +766,14 @@ class FetchController:
             st.pending_dups.clear()
         self.active.pop(f.req.rid, None)
         f.link.close_flow(f.req.rid, now)
+        fair = getattr(self.sched, "fairness", None)
+        if fair is not None:
+            # the tenant still consumed every byte that DID deliver
+            fair.on_fetch_abort(f.req, sum(
+                self._chunk_bytes(f, pc, pc.resolution
+                                  or self.config.fixed_resolution)
+                for pc in f.plan.chunks
+                if pc.t_transmit_done is not None))
         self.sched.notify_fetch_miss(f.req, now)
 
     def _on_transmitted(self, f: ActiveFetch, pc: PlannedChunk,
@@ -820,6 +828,17 @@ class FetchController:
                     RESOLUTION_ORDER.index(r)
                     if r in RESOLUTION_ORDER else -1)):
                 self.res_sink(f.req.storage_node or "", f.served_key, r)
+        fair = getattr(self.sched, "fairness", None)
+        if fair is not None:
+            # charge the tenant's virtual counter with the fetch's wire
+            # bytes BEFORE notifying (the scheduler's own fallback then
+            # sees the slot already released and is a no-op); chunk
+            # bytes are a pure function of token counts / table sizes,
+            # so both environments charge identically
+            fair.on_fetch_done(f.req, sum(
+                self._chunk_bytes(f, pc, pc.resolution
+                                  or self.config.fixed_resolution)
+                for pc in f.plan.chunks))
         self.sched.notify_fetch_done(f.req, now)
 
     # -- Appx A.3 layer-wise early admission --------------------------------

@@ -39,6 +39,12 @@ class Request:
     # receives weight/total_weight of the link; under "drr" it is served
     # proportionally more bytes per round (see network.SharedLink).
     weight: float = 1.0
+    # multi-tenant identity: owning user + SLO tier.  With a
+    # FairScheduler wired (fairness= on either environment) the tier is
+    # mapped to `weight` at arrival and all served cost is charged to
+    # `user`'s virtual counter (docs/fairness.md).  None = single-tenant.
+    user: Optional[str] = None
+    slo_tier: Optional[str] = None
 
     state: ReqState = ReqState.WAITING
     # storage-tier resolution (set when a StorageCluster serves fetches):
@@ -84,11 +90,20 @@ class Request:
 
 
 class FetchingAwareScheduler:
+    # ``fairness`` (optional) is a cluster.fairness.FairScheduler: it
+    # stamps tier weights at arrival, holds queued fetches in a
+    # per-user backlog drained in lagging-user order through
+    # take_fetches(), and charges served cost on admission /
+    # fetch-completion (docs/fairness.md).  None keeps plain FCFS.
     def __init__(self, policy: str = "kvfetcher",
-                 max_running: int = 8):
+                 max_running: int = 8, fairness=None):
         assert policy in ("kvfetcher", "fetch_agnostic")
+        assert fairness is None or policy == "kvfetcher", \
+            "fairness= needs the kvfetcher policy (fetch_agnostic IS " \
+            "the HOL-blocking FCFS baseline)"
         self.policy = policy
         self.max_running = max_running
+        self.fairness = fairness
         self.waiting: Deque[Request] = deque()
         self.waiting_for_kv: Deque[Request] = deque()
         self.running: List[Request] = []
@@ -97,11 +112,18 @@ class FetchingAwareScheduler:
     # -- intake ----------------------------------------------------------
     def submit(self, req: Request, now: float) -> None:
         req.state = ReqState.WAITING
+        if self.fairness is not None:
+            self.fairness.on_arrival(req)
         self.waiting.append(req)
 
     # -- background-fetch notifications -----------------------------------
     def notify_fetch_done(self, req: Request, now: float) -> None:
         req.fetch_done = now
+        if self.fairness is not None:
+            # wall-clock fallback: no byte meter, charge 0 but free the
+            # slot.  The virtual-clock controller charges real wire
+            # bytes *before* notifying, making this call a no-op there.
+            self.fairness.on_fetch_done(req, 0.0)
         if req.state is ReqState.WAITING_FOR_KV:
             self.waiting_for_kv.remove(req)
             req.state = ReqState.WAITING
@@ -131,6 +153,11 @@ class FetchingAwareScheduler:
         then calls ``StorageCluster.notify_recompute_done`` with
         ``req.storage_miss_key`` — the recomputed KV exists only from
         that moment, so the storage tier must not re-admit earlier."""
+        if self.fairness is not None:
+            # free the dispatch slot without charging (nothing moved on
+            # the wire; a transport abort charged its partial delivery
+            # already and this call is then a no-op)
+            self.fairness.on_fetch_miss(req)
         if req.requested_reuse_tokens is None:
             req.requested_reuse_tokens = req.reuse_tokens
         req.reuse_tokens = 0
@@ -163,7 +190,10 @@ class FetchingAwareScheduler:
                     req.fetch_dispatched = True
                     req.state = ReqState.WAITING_FOR_KV
                     self.waiting_for_kv.append(req)
-                    self.fetch_requests.append(req)
+                    if self.fairness is not None:
+                        self.fairness.enqueue(req)  # fair backlog
+                    else:
+                        self.fetch_requests.append(req)
                 else:
                     still.append(req)
             self.waiting = still
@@ -171,6 +201,8 @@ class FetchingAwareScheduler:
                 req = self.waiting.popleft()
                 req.state = ReqState.RUNNING
                 req.t_admitted = now
+                if self.fairness is not None:
+                    self.fairness.on_admit(req)
                 self.running.append(req)
                 admitted.append(req)
         else:  # fetch_agnostic: single FCFS queue, HOL blocking
@@ -190,5 +222,11 @@ class FetchingAwareScheduler:
         return admitted
 
     def take_fetches(self) -> List[Request]:
+        if self.fairness is not None:
+            # drain the fair backlog into free dispatch slots in
+            # lagging-user order (slots are released on fetch
+            # completion / miss / abort, so an abusive flood queues
+            # here instead of monopolizing the link)
+            self.fetch_requests.extend(self.fairness.take())
         out, self.fetch_requests = self.fetch_requests, []
         return out

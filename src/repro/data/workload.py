@@ -157,6 +157,65 @@ def session_trace(rng: np.random.Generator,
             for rid, (ta, spec) in enumerate(raw)]
 
 
+def zipf_user_population(rng: np.random.Generator,
+                         specs: Sequence[PrefixSpec], *,
+                         n_users: int = 12, n_requests: int = 36,
+                         alpha: float = 1.2,
+                         tiers: Sequence[str] = ("premium", "standard",
+                                                 "free"),
+                         n_abusers: int = 1, abuse_burst: int = 8,
+                         abuse_at: Optional[int] = None,
+                         gap: float = 8.0, suffix_tokens: int = 1_000,
+                         max_new_tokens: int = 8) -> List[Request]:
+    """Multi-tenant request trace: a Zipf user population with scripted
+    abusive tenants (the FairServe experiment shape, SNIPPETS.md #2).
+
+    ``n_users`` well-behaved users ``user000..`` send ``n_requests``
+    background requests whose per-user traffic follows a Zipf law over
+    user rank (rank ``i`` drawn with probability ``(i+1) ** -alpha``;
+    ``user000`` is the heaviest) with seeded-exponential inter-arrival
+    ``gap``; each request reuses a seeded-uniform prefix from ``specs``.
+    SLO tiers stripe by rank (``tiers[rank % len(tiers)]``).
+
+    ``n_abusers`` scripted abusive tenants ``abuser00..`` — always the
+    *lowest* tier (``tiers[-1]``) — each inject a flood of
+    ``abuse_burst`` back-to-back requests, all at the arrival instant
+    of background request index ``abuse_at`` (default
+    ``n_requests // 3``) and all hammering the hottest prefix
+    ``specs[0]``: the starvation shape the fairness bench and the
+    cross-env replay test drive (docs/fairness.md).
+
+    Deterministic for a given rng: identical seeds replay identical
+    traces everywhere.  Requests come back in arrival order (the flood
+    sits contiguously right after its trigger request) with dense rids
+    and ``user``/``slo_tier`` stamped."""
+    assert specs and n_users >= 1 and tiers
+    users = [f"user{i:03d}" for i in range(n_users)]
+    tier_of = {u: tiers[i % len(tiers)] for i, u in enumerate(users)}
+    ranks = np.arange(1, n_users + 1, dtype=np.float64)
+    p = ranks ** -alpha
+    p /= p.sum()
+    raw: List[tuple] = []
+    t = 0.0
+    for _ in range(n_requests):
+        t += rng.exponential(gap)
+        u = users[int(rng.choice(n_users, p=p))]
+        spec = specs[int(rng.integers(len(specs)))]
+        raw.append((t, u, tier_of[u], spec))
+    cut = min(abuse_at if abuse_at is not None else n_requests // 3,
+              len(raw) - 1)
+    t_flood = raw[cut][0]
+    flood = [(t_flood, f"abuser{a:02d}", tiers[-1], specs[0])
+             for a in range(n_abusers) for _ in range(abuse_burst)]
+    raw = raw[:cut + 1] + flood + raw[cut + 1:]
+    return [Request(rid=rid, arrival=ta,
+                    prompt_len=spec.n_tokens + suffix_tokens,
+                    reuse_tokens=spec.n_tokens, prefix=spec.key,
+                    max_new_tokens=max_new_tokens,
+                    user=u, slo_tier=tier)
+            for rid, (ta, u, tier, spec) in enumerate(raw)]
+
+
 def churn_schedule(rng: np.random.Generator,
                    node_ids: Sequence[str], *,
                    n_failures: int = 1, t_start: float = 100.0,

@@ -130,7 +130,12 @@ class LiveEngine:
                  cost: Optional[EngineCostModel] = None,
                  # speculative prefetch + host staging tier: a
                  # repro.cluster.staging.PrefetchManager over `store`
-                 prefetch=None):
+                 prefetch=None,
+                 # user-level fair scheduling: a
+                 # repro.cluster.fairness.FairScheduler shared with the
+                 # FetchingAwareScheduler (docs/fairness.md); submit()
+                 # carries user=/slo_tier= per request
+                 fairness=None):
         assert fetch_mode in ("sync", "async")
         self.params = params
         self.cfg = cfg
@@ -140,7 +145,9 @@ class LiveEngine:
             assert isinstance(store, StorageCluster), \
                 "prefetch= needs a multi-node StorageCluster store"
         self.cache = PagedKVCache(cfg, n_pages, page_size)
-        self.sched = FetchingAwareScheduler(policy, max_running=max_running)
+        self.fairness = fairness
+        self.sched = FetchingAwareScheduler(policy, max_running=max_running,
+                                            fairness=fairness)
         self.resolution = resolution
         self.fetch_mode = fetch_mode
         self.stats = EngineStats()
@@ -224,11 +231,14 @@ class LiveEngine:
 
     # -- intake -------------------------------------------------------------
     def submit(self, tokens: np.ndarray, reuse_prefix: Optional[str] = None,
-               reuse_tokens: int = 0, max_new_tokens: int = 8) -> Request:
+               reuse_tokens: int = 0, max_new_tokens: int = 8,
+               user: Optional[str] = None,
+               slo_tier: Optional[str] = None) -> Request:
         rid = len(self.prompts)
         req = Request(rid=rid, arrival=self.now(), prompt_len=len(tokens),
                       max_new_tokens=max_new_tokens,
-                      reuse_tokens=reuse_tokens, prefix=reuse_prefix)
+                      reuse_tokens=reuse_tokens, prefix=reuse_prefix,
+                      user=user, slo_tier=slo_tier)
         self.prompts[rid] = np.asarray(tokens)
         self.outputs[rid] = []
         self.sched.submit(req, req.arrival)
