@@ -48,6 +48,16 @@ scheduler holds the flood in the abuser's per-user backlog and keeps
 dispatching lagging users.  The well-behaved p99-TTFT ratio
 (fair vs FCFS) is regression-gated.
 
+The ``ttft.fleet.*`` rows (ISSUE 9) scale the simulator to a fleet of
+8 serving nodes behind the ``FleetRouter`` (docs/fleet.md), all backed
+by one 3-node storage tier: a seeded Zipf prefix-trie workload is
+placed per policy — prefix-affinity consistent hashing (with a
+load-pressure spill escape hatch), least-loaded, and random.  Affinity
+keeps a prefix chain's repeats on the serving node whose local KV pool
+already holds the prefix, converting them into node-local hits that
+skip the storage wire entirely; its mean-TTFT edge over random
+placement is regression-gated.
+
 The ``ttft.storage.failover.*`` rows kill 1 of 3 storage nodes
 mid-trace (ISSUE 4): with replication>=2 the mean post-failure TTFT
 must stay within 30% of the no-failure run (the ring heal streams over
@@ -676,6 +686,59 @@ def _storage_live_rows() -> List[Row]:
     ]
 
 
+def _fleet_rows() -> List[Row]:
+    """Fleet-scale routing (ISSUE 9, docs/fleet.md): 8 serving nodes
+    behind the `FleetRouter` over a Zipf prefix-trie workload, one
+    3-node storage tier behind them all.  Prefix-affinity placement
+    keeps a chain's asks on the serving node whose local KV already
+    holds the prefix (local hits skip the wire entirely), so its mean
+    TTFT must beat both random placement and pure least-loaded
+    balancing; the affinity-vs-random ratio is regression-gated."""
+    import numpy as np
+
+    from repro.cluster.fleet import FleetSimulator
+    from repro.cluster.storage import (StorageCluster, StorageNode,
+                                       synthetic_stored_prefix)
+    from repro.data.workload import prefix_trie_specs, zipf_prefix_trace
+
+    specs = prefix_trie_specs(4, 2)
+    rows: List[Row] = []
+    ttfts = {}
+    hits = {}
+    for policy in ("affinity", "least_loaded", "random"):
+        nodes = [StorageNode(f"n{i}", link=BandwidthTrace.constant(4.0))
+                 for i in range(3)]
+        cluster = StorageCluster(nodes, replication=2)
+        for sp in specs:
+            cluster.register(synthetic_stored_prefix(
+                sp.key, sp.n_tokens,
+                raw_bytes_per_token=CFG.kv_bytes_per_token(),
+                ratios=RATIOS, parent=sp.parent), 0.0)
+        rng = np.random.default_rng(42)
+        reqs = zipf_prefix_trace(rng, specs, n_requests=48, alpha=1.1,
+                                 gap=5.0, max_new_tokens=4)
+        fleet = FleetSimulator(CFG, kvfetcher_spec(RATIOS), n_nodes=8,
+                               bandwidth=BandwidthTrace.constant(8.0),
+                               storage=cluster, table=H20_TABLE,
+                               policy=policy, local_kv_tokens=150_000)
+        res = fleet.run(reqs, max_new_tokens=4)
+        t = summarize(res.requests)["ttft_mean"]
+        ttfts[policy] = t
+        hits[policy] = res.local_hits
+        rows.append((f"ttft.fleet.{policy}", t * 1e6, t))
+        rows.append((f"ttft.fleet.{policy}.local_hits", 0.0,
+                     float(res.local_hits)))
+    assert ttfts["affinity"] < ttfts["random"], \
+        "prefix-affinity routing must beat random placement"
+    assert hits["affinity"] > hits["random"], \
+        "affinity must convert repeats into node-local hits"
+    rows.append(("ttft.fleet.speedup_affinity_vs_random", 0.0,
+                 ttfts["random"] / ttfts["affinity"]))
+    rows.append(("ttft.fleet.speedup_affinity_vs_least_loaded", 0.0,
+                 ttfts["least_loaded"] / ttfts["affinity"]))
+    return rows
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     methods = {
@@ -705,6 +768,7 @@ def run() -> List[Row]:
     rows.extend(_storage_failover_rows())
     rows.extend(_fairness_rows())
     rows.extend(_prefetch_rows())
+    rows.extend(_fleet_rows())
     rows.extend(_live_rows())
     rows.extend(_wan_live_rows())
     rows.extend(_storage_live_rows())

@@ -140,7 +140,14 @@ class PrefetchManager:
                  # user may only burn budget * prefetch_share(user) —
                  # one tenant's mispredictions cannot exhaust the
                  # shared budget (docs/fairness.md)
-                 fairness=None):
+                 fairness=None,
+                 # fleet mode (docs/fleet.md): with N serving nodes the
+                 # mispredict budget additionally splits per node —
+                 # each node may burn at most budget / n_nodes, so one
+                 # node's cold working set cannot exhaust speculation
+                 # for the whole fleet.  Harnesses attribute keys to
+                 # nodes via note_node() at dispatch time.
+                 n_nodes: int = 1):
         assert transport in ("link", "sync"), transport
         self.cluster = cluster
         self.staging = staging
@@ -156,6 +163,9 @@ class PrefetchManager:
         self.events: List[Tuple[str, str]] = []
         self.wasted_bytes = 0.0
         self.wasted_by_user: Dict[str, float] = {}
+        self.n_nodes = max(1, int(n_nodes))
+        self.wasted_by_node: Dict[str, float] = {}
+        self._node_of_prefix: Dict[str, str] = {}
         self.prefetches_started = 0
         self.prefetches_committed = 0
         self.prefetches_cancelled = 0
@@ -300,11 +310,27 @@ class PrefetchManager:
         else:
             self.events.append(("stage_reject", key))
 
+    def note_node(self, key: Optional[str], node_id: str) -> None:
+        """Attribute ``key`` to the serving node that last demanded it.
+        Fleet harnesses call this at dispatch time, so the per-node
+        budget split is a pure function of the placement sequence
+        (cross-environment deterministic, like every other log)."""
+        if key is not None:
+            self._node_of_prefix[key] = node_id
+
     def _over_budget(self, key: str) -> bool:
         """Budget check for one more speculation on ``key``: global cap
         without fairness; with a FairScheduler, the cap is the key's
         demanding user's share of the budget (an unattributed key —
-        never demanded — falls back to the global check)."""
+        never demanded — falls back to the global check).  In fleet
+        mode (``n_nodes > 1``) the demanding *node*'s even share
+        ``budget / n_nodes`` is checked as well — whichever cap trips
+        first declines the speculation."""
+        if self.n_nodes > 1:
+            node = self._node_of_prefix.get(key)
+            if node is not None and self.wasted_by_node.get(node, 0.0) \
+                    >= self.budget / self.n_nodes:
+                return True
         if self.fairness is not None:
             user = self.fairness.prefix_user(key)
             if user is not None:
@@ -319,6 +345,10 @@ class PrefetchManager:
             if user is not None:
                 self.wasted_by_user[user] = \
                     self.wasted_by_user.get(user, 0.0) + nbytes
+        node = self._node_of_prefix.get(key)
+        if node is not None:
+            self.wasted_by_node[node] = \
+                self.wasted_by_node.get(node, 0.0) + nbytes
 
     def _charge_waste(self, key: str) -> None:
         """A staged entry left the tier: free if it earned a host hit,

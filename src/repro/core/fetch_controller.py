@@ -128,6 +128,12 @@ class PipelineConfig:
     # exhausts it with every copy lost aborts the fetch and falls back
     # to full prefill via notify_fetch_miss (no eternal stall).
     max_attempts: int = 64
+    # Explicit ACK/NACK propagation delay in the retransmit race: a real
+    # sender cannot observe a missing ack before the ack itself would
+    # have crossed the reverse path, so every retransmit timer arms at
+    # submit + rto + ack_delay.  The default 0 keeps every existing
+    # trace byte-identical.
+    ack_delay: float = 0.0
 
 
 class FetchHooks:
@@ -562,7 +568,8 @@ class FetchController:
         st.in_flight[attempt] = handle
         st.timer_attempt = attempt
         st.last_submit = t_start
-        deadline = t_start + self._rto(f, nbytes, st.fires)
+        deadline = (t_start + self._rto(f, nbytes, st.fires)
+                    + self.config.ack_delay)
         self._push(deadline,
                    lambda t, f=f, pc=pc, seq=seq, attempt=attempt:
                    self._on_timeout(f, pc, seq, attempt, t))
@@ -628,7 +635,8 @@ class FetchController:
             # a duplicate.  (Cross-flow contention stays invisible, as
             # for a real transport, and genuinely fires spuriously.)
             nbytes = self._chunk_bytes(f, pc, pc.resolution)
-            self._push(now + self._rto(f, nbytes, st.fires),
+            self._push(now + self._rto(f, nbytes, st.fires)
+                       + self.config.ack_delay,
                        lambda t, f=f, pc=pc, seq=seq, attempt=attempt:
                        self._on_timeout(f, pc, seq, attempt, t))
             return

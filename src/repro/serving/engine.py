@@ -54,7 +54,8 @@ from repro.configs.base import ModelConfig
 from repro.core.adaptive import DecodeTable
 from repro.core.chunks import KVManifest
 from repro.core.codec import KVCodec
-from repro.core.fetch import FetchPlan, PlannedChunk, build_plan
+from repro.core.fetch import (FetchPlan, PlannedChunk, build_plan,
+                              sharded_layers_ready, split_plan_shards)
 from repro.core.fetch_controller import (ActiveFetch, FetchController,
                                          FetchHooks, PipelineConfig)
 from repro.core.layout import IntraLayout
@@ -68,6 +69,11 @@ from repro.models.common import rms_norm
 from repro.models.transformer import lm_logits
 from repro.paged.cache import PagedKVCache
 from repro.serving import paged_model
+
+
+# Shadow rids for mesh-sharded fetches live far above any real rid so
+# the per-shard controller flows can never collide with request flows.
+_SHADOW_RID_BASE = 10_000_000
 
 
 @dataclasses.dataclass
@@ -135,7 +141,18 @@ class LiveEngine:
                  # repro.cluster.fairness.FairScheduler shared with the
                  # FetchingAwareScheduler (docs/fairness.md); submit()
                  # carries user=/slo_tier= per request
-                 fairness=None):
+                 fairness=None,
+                 # fleet mode (docs/fleet.md): the fleet harness drains
+                 # the shared fair backlog centrally and hands ready
+                 # fetches to dispatch_fetch(); step() must not race it
+                 external_dispatch: bool = False,
+                 # shard the paged cache over a jax device mesh
+                 # (launch/mesh.py) and run per-shard fetch/decode/
+                 # restore plans as independent flows through the one
+                 # controller; mesh_shards= overrides the shard count
+                 # (e.g. model-parallel degree to emulate on a small
+                 # debug mesh)
+                 mesh=None, mesh_shards: Optional[int] = None):
         assert fetch_mode in ("sync", "async")
         self.params = params
         self.cfg = cfg
@@ -145,6 +162,21 @@ class LiveEngine:
             assert isinstance(store, StorageCluster), \
                 "prefetch= needs a multi-node StorageCluster store"
         self.cache = PagedKVCache(cfg, n_pages, page_size)
+        self.external_dispatch = external_dispatch
+        # mesh sharding: page arrays live distributed over the mesh's
+        # "model" axis (kv heads); fetch plans split into per-shard
+        # subplans so each shard restores its slice as its own flow
+        self.n_shards = 1
+        if mesh is not None or mesh_shards is not None:
+            self.n_shards = int(mesh_shards) if mesh_shards is not None \
+                else dict(mesh.shape).get("model", 1)
+            assert self.n_shards >= 1
+            if mesh is not None:
+                self._shard_cache(mesh)
+        #: rid -> (req, shard subplans) for fetches in sharded flight
+        self._sharded: Dict[int, Tuple[Request, List[FetchPlan]]] = {}
+        #: shadow rid -> real request (restore callbacks remap through it)
+        self._shadow_real: Dict[int, Request] = {}
         self.fairness = fairness
         self.sched = FetchingAwareScheduler(policy, max_running=max_running,
                                             fairness=fairness)
@@ -214,6 +246,20 @@ class LiveEngine:
     def now(self) -> float:
         return self._clock if self.virtual else time.monotonic()
 
+    # -- mesh-sharded paged cache --------------------------------------------
+    def _shard_cache(self, mesh) -> None:
+        """Lay the paged KV arrays out over ``mesh``: kv heads shard on
+        the "model" axis (DEFAULT_RULES), everything else replicates.
+        Non-divisible dims fall back to replication, so tiny debug
+        models on 1-device meshes stay valid."""
+        from repro.sharding import rules
+        with rules.activate(mesh):
+            ns = rules.named_sharding(
+                ("layers", None, None, "kv_heads", None),
+                self.cache.k_pages.shape, mesh=mesh)
+        self.cache.k_pages = jax.device_put(self.cache.k_pages, ns)
+        self.cache.v_pages = jax.device_put(self.cache.v_pages, ns)
+
     # -- storage-node churn ---------------------------------------------------
     def fail_node(self, node_id: str) -> None:
         """Kill one storage node at the engine's current clock: its keys
@@ -233,8 +279,12 @@ class LiveEngine:
     def submit(self, tokens: np.ndarray, reuse_prefix: Optional[str] = None,
                reuse_tokens: int = 0, max_new_tokens: int = 8,
                user: Optional[str] = None,
-               slo_tier: Optional[str] = None) -> Request:
-        rid = len(self.prompts)
+               slo_tier: Optional[str] = None,
+               rid: Optional[int] = None) -> Request:
+        # fleet harnesses pass fleet-global rids so one placement log
+        # covers every engine; standalone use keeps the local counter
+        rid = len(self.prompts) if rid is None else int(rid)
+        assert rid not in self.prompts, f"rid {rid} already submitted"
         req = Request(rid=rid, arrival=self.now(), prompt_len=len(tokens),
                       max_new_tokens=max_new_tokens,
                       reuse_tokens=reuse_tokens, prefix=reuse_prefix,
@@ -245,6 +295,27 @@ class LiveEngine:
         return req
 
     # -- fetch dispatch -------------------------------------------------------
+    def dispatch_fetch(self, req: Request) -> None:
+        """External-dispatch entry point: the fleet harness drained the
+        shared fair backlog and placed ``req`` here — start its fetch
+        and re-run admission, exactly what step() does internally when
+        it owns dispatch."""
+        self._start_fetch(req)
+        self.sched.schedule(self.now())
+
+    def local_restore(self, req: Request) -> None:
+        """Serve ``req`` from this serving node's own resident KV: a
+        real restore from the cataloged manifest with ZERO virtual
+        network time (the bytes never cross the wire — the affinity
+        router already put the request where its prefix lives).
+        Fairness sees the same 0-byte "fetched" event the simulator
+        logs for a local hit."""
+        assert isinstance(self.store, StorageCluster) and req.prefix
+        entry = self.store.catalog[req.prefix]
+        plan = build_plan(req.rid, entry.manifest)
+        self.cache.add_seq(req.rid, req.prompt_len + req.max_new_tokens)
+        self._run_fetch_wall(req, plan)
+
     def _start_fetch(self, req: Request) -> None:
         """Resolve the request's prefix against the store and start the
         fetch.  Against a multi-node `StorageCluster` the resolution is a
@@ -298,12 +369,72 @@ class LiveEngine:
         if self.ctrl is None:
             self._run_fetch_wall(req, plan)
             return
+        if self.n_shards > 1:
+            self._start_sharded(req, plan, link=link,
+                                resolutions=res_avail,
+                                served_key=served_key)
+            return
         self.ctrl.start(req, plan, self.now(), link=link,
                         resolutions=res_avail, served_key=served_key)
         if self.fetch_mode == "sync":
             # blocking baseline: the engine idles until the (serialized)
             # pipeline finishes; the virtual clock absorbs the whole fetch
             self._clock = max(self._clock, self.ctrl.drain(plan))
+
+    # -- mesh-sharded fetch: per-shard plans as independent flows -------------
+    def _start_sharded(self, req: Request, plan: FetchPlan, *,
+                       link=None, resolutions=None,
+                       served_key=None) -> None:
+        """Split the plan by layer-group shard and run every shard's
+        fetch/decode/restore stream as its own flow through the ONE
+        controller event loop: shards contend on the link like the real
+        per-device DMA streams would, and the request is admitted when
+        `sharded_layers_ready` over the subplans says its contiguous
+        layer prefix landed.  Each shard fetches under a *shadow* of
+        the request (fresh rid, state=WAITING) so the controller's
+        per-shard completion bookkeeping — fairness charge, scheduler
+        notify, early admission — all no-op; the REAL request completes
+        exactly once, in `_check_sharded`, when the last shard drains."""
+        subplans = split_plan_shards(plan, self.n_shards)
+        self._sharded[req.rid] = (req, subplans)
+        req.fetch_started = self.now()
+        for s, sp in enumerate(subplans):
+            shadow = dataclasses.replace(
+                req, rid=_SHADOW_RID_BASE + req.rid * 64 + s,
+                token_times=[])
+            # replace() copied WAITING_FOR_KV; shadows must stay inert
+            # for the scheduler (see notify_fetch_done / early admit)
+            shadow.state = ReqState.WAITING
+            self._shadow_real[shadow.rid] = req
+            sp.rid = shadow.rid
+            self.ctrl.start(shadow, sp, self.now(), link=link,
+                            resolutions=resolutions,
+                            served_key=served_key)
+        if self.fetch_mode == "sync":
+            t = self._clock
+            for sp in subplans:
+                t = max(t, self.ctrl.drain(sp))
+            self._clock = t
+            self._check_sharded()
+
+    def _check_sharded(self) -> None:
+        """Aggregate per-shard progress into each real request: update
+        its ready-layer prefix and fire the single completion (or miss)
+        when every shard lands (or any aborts)."""
+        for rid in list(self._sharded):
+            req, subplans = self._sharded[rid]
+            req.layers_ready = sharded_layers_ready(subplans)
+            if any(sp.aborted for sp in subplans):
+                del self._sharded[rid]
+                self.sched.notify_fetch_miss(req, self.now())
+            elif all(sp.done for sp in subplans):
+                del self._sharded[rid]
+                if self.fairness is not None:
+                    nbytes = float(sum(
+                        pc.sizes.get(pc.resolution or self.resolution, 0)
+                        for sp in subplans for pc in sp.chunks))
+                    self.fairness.on_fetch_done(req, nbytes)
+                self.sched.notify_fetch_done(req, self.now())
 
     def _run_fetch_wall(self, req: Request, plan: FetchPlan) -> None:
         """Original wall-clock behaviour: fetch synchronously, stamping
@@ -320,6 +451,9 @@ class LiveEngine:
     # -- frame-wise restoration (real codec + paged scatter) -----------------
     def _restore_chunk(self, req: Request, plan: FetchPlan,
                        pc: PlannedChunk) -> None:
+        # sharded fetches restore under shadow requests; the pages
+        # belong to the real rid's sequence
+        req = self._shadow_real.get(req.rid, req)
         man = plan.manifest
         assert man is not None
         res = pc.resolution or self.resolution
@@ -381,7 +515,11 @@ class LiveEngine:
             return
         while req.fetch_done is None and req.layers_ready <= layer:
             t = self.ctrl.pump_next()
+            if self._sharded:
+                self._check_sharded()
             if t is None:
+                if req.fetch_done is not None or req.layers_ready > layer:
+                    break  # the final pump completed a sharded fetch
                 raise RuntimeError(
                     f"rid={req.rid}: layer {layer} KV never arrived")
             if t > self._clock:
@@ -435,11 +573,14 @@ class LiveEngine:
         """One engine iteration. Returns False when idle and done."""
         if self.ctrl is not None:
             self.ctrl.pump(self.now())
+            if self._sharded:
+                self._check_sharded()
         now = self.now()
         self.sched.schedule(now)
-        for req in self.sched.take_fetches():
-            self._start_fetch(req)
-            self.sched.schedule(self.now())
+        if not self.external_dispatch:
+            for req in self.sched.take_fetches():
+                self._start_fetch(req)
+                self.sched.schedule(self.now())
         if self.prefetch is not None:
             # sglang-style tick: launch speculation for heated prefixes
             # (deferred while demand fetches hold the source link)
@@ -483,6 +624,8 @@ class LiveEngine:
             if t is not None:
                 self._clock = max(self._clock, t)
                 self.ctrl.pump(self._clock)
+                if self._sharded:
+                    self._check_sharded()
                 self.sched.schedule(self._clock)
         self.stats.steps += 1
         return bool(self.sched.running or self.sched.waiting

@@ -86,6 +86,52 @@ def test_checker_fails_on_unknown_command_shape(tmp_path, monkeypatch):
         sys.path.pop(0)
 
 
+def test_checker_fails_on_orphaned_doc(tmp_path, monkeypatch):
+    """A docs/*.md not link-reachable from README.md is invisible to
+    readers and must fail the docs job (ISSUE 9)."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "tools"))
+    try:
+        import check_docs
+        (tmp_path / "docs").mkdir()
+        (tmp_path / "README.md").write_text(
+            "see [the guide](docs/linked.md)\n"
+            "```bash\npython -m pytest -q\n```\n")
+        (tmp_path / "docs" / "linked.md").write_text("# linked\n")
+        (tmp_path / "docs" / "orphan.md").write_text("# nobody links me\n")
+        monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+        assert check_docs.main() == 1
+        assert check_docs.check_orphans() == [
+            "orphaned doc (not linked from README.md): docs/orphan.md"]
+        # transitively linked docs (README -> linked -> deep) are fine
+        (tmp_path / "docs" / "linked.md").write_text(
+            "[deep](orphan.md)\n")
+        assert check_docs.check_orphans() == []
+    finally:
+        sys.path.pop(0)
+
+
+def test_checker_fails_on_doc_referencing_deleted_source(tmp_path,
+                                                         monkeypatch):
+    """Prose mentioning a repo path that no longer exists must fail —
+    module tables rot exactly this way (ISSUE 9)."""
+    root = pathlib.Path(__file__).resolve().parents[1]
+    sys.path.insert(0, str(root / "tools"))
+    try:
+        import check_docs
+        (tmp_path / "src").mkdir()
+        (tmp_path / "src" / "real.py").write_text("x = 1\n")
+        (tmp_path / "README.md").write_text(
+            "`src/real.py` is real but `src/deleted_module.py` is gone\n"
+            "```bash\npython -m pytest -q\n```\n")
+        monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+        assert check_docs.main() == 1
+        assert check_docs.check_source_paths(tmp_path / "README.md") == [
+            "README.md: references deleted path -> src/deleted_module.py"]
+    finally:
+        sys.path.pop(0)
+
+
 def test_checker_scans_docs_subdirectories(tmp_path, monkeypatch):
     """Docs added under docs/<subdir>/ must be scanned, not silently
     skipped (regression: the old glob was a flat docs/*.md)."""

@@ -50,7 +50,7 @@ class _Hooks(FetchHooks):
 def _controller(sched, *, loss=None, policy="fair", comp=None,
                 gbps=1.0, nbytes=50e6, pipelined=True, hooks=None,
                 timeout=0.05, trace=None, ramp=None, rto_mode="adaptive",
-                max_attempts=64, blocking=False):
+                max_attempts=64, blocking=False, ack_delay=0.0):
     link = make_link(trace or BandwidthTrace.constant(gbps),
                      policy=policy, loss=loss, ramp=ramp)
     return FetchController(
@@ -62,7 +62,8 @@ def _controller(sched, *, loss=None, policy="fair", comp=None,
                               retransmit_timeout=timeout,
                               rto_mode=rto_mode,
                               max_attempts=max_attempts,
-                              blocking_fetch=blocking),
+                              blocking_fetch=blocking,
+                              ack_delay=ack_delay),
         hooks=hooks or _Hooks(nbytes, comp))
 
 
@@ -123,6 +124,45 @@ def test_lossy_fetch_completes_with_retransmits():
     clean = next(p for i, p in enumerate(plan.chunks) if i not in by_seq)
     assert (pc.t_transmit_done - pc.t_transmit_start) > \
         (clean.t_transmit_done - clean.t_transmit_start)
+
+
+def test_ack_delay_shifts_rto_timer_arming():
+    """``PipelineConfig.ack_delay`` pushes every retransmit timer out by
+    exactly the ACK propagation delay: the sender cannot observe a
+    missing ack before the ack itself would have crossed the reverse
+    path.  The wire event itself does not move — only the timer — and
+    the default 0 keeps the schedule byte-identical."""
+    delay = 0.2
+
+    def pending_after_start(ack_delay):
+        sched = _RecSched("kvfetcher", max_running=4)
+        req = Request(rid=0, arrival=0.0, prompt_len=32_000,
+                      reuse_tokens=30_000, prefix="p")
+        sched.submit(req, 0.0)
+        sched.schedule(0.0)
+        (fr,) = sched.take_fetches()
+        ctrl = _controller(sched, ack_delay=ack_delay)
+        # start() submits chunk 0 and arms its retransmit timer, but
+        # nothing is pumped: the queue holds exactly the wire-completion
+        # event and the timer.
+        ctrl.start(fr, synthetic_plan(0, 30_000, 9, 10_000), 0.0)
+        return sorted(t for t, _, _ in ctrl._events)
+
+    base = pending_after_start(0.0)
+    shifted = pending_after_start(delay)
+    assert pending_after_start(0.0) == base  # deterministic harness
+    assert len(base) == len(shifted) == 2
+    diffs = sorted(s - b for b, s in zip(base, shifted))
+    # the wire event is unmoved; the RTO arming shifts by exactly delay
+    assert diffs == pytest.approx([0.0, delay])
+    # timers fire later, so a lossy fetch pays the delay per recovery:
+    # end-to-end completion under loss is strictly later with the delay
+    loss_kw = lambda d: {"loss": LossModel.bernoulli(0.3, seed=11),
+                         "ack_delay": d}
+    *_, ctrl0 = _one_fetch(loss_kw(0.0))
+    *_, ctrl_d = _one_fetch(loss_kw(delay))
+    assert ctrl_d.retransmits_total > 0
+    assert ctrl_d.now > ctrl0.now
 
 
 def test_loss_slows_ttft_but_not_correctness():

@@ -14,7 +14,17 @@ For every fenced ```bash block the checker validates each command line:
                                      for, or teach it the new shape
 
 Relative markdown links are also resolved, so a doc cannot point at a
-file that was moved or deleted.  Runs fully offline in a few seconds:
+file that was moved or deleted.  Two structural checks (ISSUE 9) keep
+the doc graph itself healthy:
+
+  * **orphans** — every ``docs/**/*.md`` must be reachable from
+    README.md by following relative markdown links; an unreferenced
+    doc is invisible to readers and rots fastest
+  * **source paths** — bare repo paths mentioned in prose (``src/...``,
+    ``tools/...``, ``benchmarks/...``, ``tests/...``) must exist, so a
+    doc cannot keep describing a module that was deleted or moved
+
+Runs fully offline in a few seconds:
 
     PYTHONPATH=src python tools/check_docs.py
 """
@@ -34,6 +44,9 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 DOC_GLOBS = ["README.md", "docs/**/*.md"]
 FENCE = re.compile(r"^```(\w*)\s*$")
 LINK = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+# bare repo paths in prose/backticks: src/repro/core/fetch.py, tools/...
+SRC_PATH = re.compile(
+    r"\b((?:src|tools|benchmarks|tests)/[\w/.-]+\.(?:py|md|json))\b")
 
 
 def doc_files() -> List[pathlib.Path]:
@@ -112,11 +125,43 @@ def check_links(path: pathlib.Path) -> List[str]:
     return bad
 
 
+def check_orphans() -> List[str]:
+    """Every docs/**/*.md must be link-reachable from README.md."""
+    reachable = set()
+    queue = [ROOT / "README.md"]
+    while queue:
+        doc = queue.pop()
+        if doc in reachable or not doc.exists():
+            continue
+        reachable.add(doc)
+        for target in LINK.findall(doc.read_text()):
+            target = target.split("#")[0].strip()
+            if not target or target.startswith(("http://", "https://")):
+                continue
+            if target.endswith(".md"):
+                queue.append((doc.parent / target).resolve())
+    return [f"orphaned doc (not linked from README.md): "
+            f"{d.relative_to(ROOT)}"
+            for d in doc_files() if d.resolve() not in reachable]
+
+
+def check_source_paths(path: pathlib.Path) -> List[str]:
+    """Repo paths mentioned in the doc body must exist on disk."""
+    bad = []
+    for target in SRC_PATH.findall(path.read_text()):
+        if not (ROOT / target).exists():
+            bad.append(f"{path.relative_to(ROOT)}: "
+                       f"references deleted path -> {target}")
+    return bad
+
+
 def main() -> int:
     failures: List[str] = []
     n_cmds = 0
+    failures.extend(check_orphans())
     for doc in doc_files():
         failures.extend(check_links(doc))
+        failures.extend(check_source_paths(doc))
         for line_no, cmd in extract_commands(doc):
             n_cmds += 1
             ok, detail = check_command(cmd)
