@@ -7,13 +7,14 @@ paged memory, then prefill only their suffixes. Generations are compared
 against full prefill to demonstrate losslessness, and the fetching-aware
 scheduler serves non-reuse requests without HOL blocking.
 
-This demo runs the wall-clock engine (fetches complete at dispatch — no
-network model).  To serve over the WAN model instead, construct the
-engine with ``bandwidth=BandwidthTrace(...)``, ``fetch_mode="async"``,
-and optionally ``loss=LossModel.bernoulli(...)`` / ``link_policy="drr"``
-(see docs/fetch_pipeline.md and the ``ttft.wan.*`` rows of
-benchmarks/bench_ttft.py); a streaming per-token client view is still an
-open ROADMAP item.
+The batched section runs the wall-clock engine (fetches complete at
+dispatch — no network model).  The final section serves the same reuse
+request over the modeled WAN (``bandwidth=BandwidthTrace(...)``,
+``fetch_mode="async"`` — see docs/fetch_pipeline.md and the
+``ttft.wan.*`` rows of benchmarks/bench_ttft.py) with a **streaming
+per-token client view**: ``on_token=`` delivers each token to the
+client callback the moment it exists on the virtual clock, so the
+printed TTFT and inter-token gaps are exactly what the metrics report.
 
     PYTHONPATH=src python examples/serve_reuse.py
 """
@@ -23,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_config
+from repro.cluster.network import BandwidthTrace
 from repro.cluster.storage import KVStore
 from repro.core.chunks import prefix_key
 from repro.data.workload import shared_prefix_tokens
@@ -91,4 +93,35 @@ assert eng.stats.restored_tokens == 2 * PREFIX_LEN * N_REQ
 for name, s in split_summary(eng.finished).items():
     if s.get("n"):
         print(f"  {name:10s} n={s['n']:.0f} ttft_mean={s.get('ttft_mean', 0):.2f}s")
+
+# ---- streaming client view over the modeled WAN ----------------------------
+# The same reuse request, now fetched over a 0.5 Gbps virtual link with
+# the async pipeline.  on_token= fires inside the engine at the instant
+# each token exists — first token mid-prefill, then one per decode step —
+# so a client sees tokens trickle at virtual-clock pace instead of
+# waiting for run() to return the finished batch.
+print("== streaming: per-token client view (async WAN, virtual clock) ==")
+stream = []
+
+
+def client_view(req, tok, t):
+    stream.append((req.rid, tok, t))
+    dt = t - stream[0][2]
+    tag = "ttft" if len(stream) == 1 else f"+{dt:.3f}s"
+    print(f"  rid={req.rid} token#{len(stream) - 1} -> {tok:4d} "
+          f"at t={t:.3f}s ({tag})")
+
+
+eng_s = LiveEngine(params, cfg, store, policy="kvfetcher",
+                   fetch_mode="async",
+                   bandwidth=BandwidthTrace.constant(0.5),
+                   on_token=client_view)
+sreq = eng_s.submit(prompts[0], reuse_prefix=key, reuse_tokens=PREFIX_LEN,
+                    max_new_tokens=4)
+eng_s.run()
+toks = [tok for _, tok, _ in stream]
+assert toks == eng_s.outputs[sreq.rid], "stream must mirror outputs"
+assert [t for _, _, t in stream] == sreq.token_times
+print(f"  streamed {len(toks)} tokens, ttft={sreq.t_first_token:.3f}s "
+      "(virtual); stream == outputs, times == token_times")
 print("OK")

@@ -108,7 +108,9 @@ class FairScheduler:
         self._backlog: Dict[str, Deque[Request]] = {}
         self._inflight: Dict[int, str] = {}  # rid -> user
         self._inflight_by_user: Dict[str, int] = {}
-        self._served: set = set()  # rids already charged decode work
+        # rids already charged decode work; an insertion-ordered dict
+        # (not a set) so any future drain replays in admission order
+        self._served: Dict[int, None] = {}
         self._prefix_users: Dict[str, str] = {}  # key -> last demander
 
     def __repr__(self) -> str:
@@ -260,7 +262,7 @@ class FairScheduler:
         so the decision log never depends on compute-side timing."""
         if req.rid in self._served:
             return
-        self._served.add(req.rid)
+        self._served[req.rid] = None
         u = self.user_of(req)
         tokens = (max(req.prompt_len - req.reuse_tokens, 0)
                   + self.output_token_weight * req.max_new_tokens)

@@ -287,16 +287,31 @@ class FleetSimulator(_FleetMixin):
 
     def __init__(self, cfg, method: MethodSpec, *, n_nodes: int,
                  bandwidth, policy: str = "affinity",
+                 # per-node ServingSimulator knobs: the analytic cost
+                 # model (chip/n_chips/.../mfu) is simulator-only, and
+                 # the link/table shaping reaches LiveFleet engines
+                 # through its engine_kw= pass-through instead
+                 # repro-lint: allow(cross-env-parity)
                  chip: str = "h20", n_chips: int = 2,
+                 # repro-lint: allow(cross-env-parity)
                  loss=None, link_policy=None, link_ramp=None,
-                 storage=None, prefetch=None, fairness=None, table=None,
+                 storage=None, prefetch=None, fairness=None,
+                 # repro-lint: allow(cross-env-parity) -- engine_kw
+                 table=None,
                  router: Optional[FleetRouter] = None,
                  local_kv_tokens: Optional[int] = None,
+                 # clock-scripted churn is sim-only; LiveFleet scripts
+                 # the shared churn_at_dispatch= (dispatch-indexed) or
+                 # calls engine fail_node()/recover_node() imperatively
+                 # repro-lint: allow(cross-env-parity)
                  fail_at: Optional[List[Tuple[float, str]]] = None,
+                 # repro-lint: allow(cross-env-parity)
                  recover_at: Optional[List[Tuple[float, str]]] = None,
                  churn_at_dispatch: Optional[
                      List[Tuple[int, str, str]]] = None,
+                 # repro-lint: allow(cross-env-parity) -- analytic knobs
                  chunk_tokens: int = 10_000, prefill_chunk: int = 2048,
+                 # repro-lint: allow(cross-env-parity) -- engine_kw/mfu
                  max_running: int = 8, mfu: float = 0.45):
         self.cfg = cfg
         self.method = method
@@ -388,7 +403,11 @@ class FleetSimulator(_FleetMixin):
             else:
                 ready = [r for nd in self.nodes
                          for r in nd.sched.take_fetches()]
-            reschedule = set()
+            # insertion-ordered dict, not a set: the drain below feeds
+            # admission (which appends fairness/serve events), so its
+            # order must never depend on per-process hashing; sorted()
+            # keeps the historical node-index drain order
+            reschedule: Dict[int, None] = {}
             for req in ready:
                 k = self.placement[req.rid]
                 self._churn_tick(now)
@@ -400,10 +419,10 @@ class FleetSimulator(_FleetMixin):
                     req.storage_hit = "local"
                     req.storage_node = f"s{k}"
                     nd.sched.notify_fetch_done(req, now)
-                    reschedule.add(k)
+                    reschedule[k] = None
                 else:
                     if nd._dispatch_fetch(req, now):
-                        reschedule.add(k)  # miss: re-run admission
+                        reschedule[k] = None  # miss: re-run admission
                     else:
                         self._note_local(k, req)
                     if self.prefetch is not None:

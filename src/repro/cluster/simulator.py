@@ -213,6 +213,9 @@ class _SimHooks(FetchHooks):
 
 class ServingSimulator:
     def __init__(self, cfg: ModelConfig, method: MethodSpec, *,
+                 # analytic engine cost model knobs — simulator-only by
+                 # construction (the live engine runs real compute)
+                 # repro-lint: allow(cross-env-parity)
                  chip: str = "h20", n_chips: int = 2,
                  bandwidth: BandwidthTrace,
                  loss: Optional[LossModel] = None,
@@ -223,17 +226,27 @@ class ServingSimulator:
                  # repro.cluster.staging.PrefetchManager over `storage`
                  prefetch=None,
                  # scripted storage-node churn: fail_at=[(t, node_id)]
-                 # kills nodes mid-run, recover_at brings them back
+                 # kills nodes mid-run, recover_at brings them back.
+                 # Sim-only ctor form: LiveEngine scripts the identical
+                 # churn imperatively via fail_node()/recover_node()
+                 # (clock-scale-free, so the logs still replay)
+                 # repro-lint: allow(cross-env-parity)
                  fail_at: Optional[List[Tuple[float, str]]] = None,
+                 # repro-lint: allow(cross-env-parity)
                  recover_at: Optional[List[Tuple[float, str]]] = None,
                  table: Optional[DecodeTable] = None,
                  # user-level fair scheduling: a
                  # repro.cluster.fairness.FairScheduler shared with the
                  # FetchingAwareScheduler (docs/fairness.md)
                  fairness=None,
+                 # analytic chunking/throughput knobs (the live engine
+                 # derives these from the model + paged memory)
+                 # repro-lint: allow(cross-env-parity)
                  chunk_tokens: int = 10_000,
+                 # repro-lint: allow(cross-env-parity)
                  prefill_chunk: int = 2048,
                  max_running: int = 8,
+                 # repro-lint: allow(cross-env-parity)
                  mfu: float = 0.45):
         self.cfg = cfg
         self.method = method

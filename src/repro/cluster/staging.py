@@ -54,7 +54,7 @@ for a prefetch-then-hit trace (``tests/test_prefetch.py``).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -170,7 +170,10 @@ class PrefetchManager:
         self.prefetches_committed = 0
         self.prefetches_cancelled = 0
         self.host_hits = 0
-        self._earned: Set[str] = set()
+        # staged keys that earned a host hit; insertion-ordered dict,
+        # not a set, so any drain replays in hit order (repro-lint
+        # ordered-iteration)
+        self._earned: Dict[str, None] = {}
         self._inflight: Dict[str, _Speculation] = {}
         self._flow = _PREFETCH_FLOW_BASE
         self._push = None
@@ -225,7 +228,7 @@ class PrefetchManager:
         e = self.staging.node.get(key, now)
         if e is None or e.n_tokens < requested_tokens:
             return None
-        self._earned.add(key)
+        self._earned[key] = None
         self.host_hits += 1
         self.events.append(("host_hit", key))
         return e
@@ -354,7 +357,7 @@ class PrefetchManager:
         """A staged entry left the tier: free if it earned a host hit,
         otherwise its stored bytes count against the budget."""
         if key in self._earned:
-            self._earned.discard(key)
+            self._earned.pop(key, None)
             return
         e = self.cluster.catalog.get(key)
         if e is not None:

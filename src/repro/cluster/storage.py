@@ -72,7 +72,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -661,8 +661,12 @@ class StorageCluster:
         # entries are (entry, source_id, target_id, kind)
         self.heal_queue: List[
             Tuple[StoredPrefix, Optional[str], str, str]] = []
-        # delayed write-on-miss: keys whose recompute is outstanding
-        self._pending_recompute: Set[str] = set()
+        # delayed write-on-miss: keys whose recompute is outstanding.
+        # An insertion-ordered dict (not a set): the heal/recompute
+        # paths may drain it, and a set of str keys would drain in
+        # per-process hash order, silently breaking cross-env replay
+        # (repro-lint ordered-iteration)
+        self._pending_recompute: Dict[str, None] = {}
         # external event-queue hook (heal="link"): push(t, fn)
         self._push = None
         self._heal_flow = 0  # negative flow ids, distinct from rids
@@ -933,7 +937,7 @@ class StorageCluster:
         self.misses += 1
         self.events.append(("miss", key, ""))
         if self.write_on_miss and want is not None:
-            self._pending_recompute.add(key)
+            self._pending_recompute[key] = None
         return StorageHit(kind="miss", requested_tokens=requested,
                           missed_key=want.key if want else None)
 
@@ -945,7 +949,7 @@ class StorageCluster:
         token; a no-op for keys with no pending write."""
         if key not in self._pending_recompute:
             return
-        self._pending_recompute.discard(key)
+        self._pending_recompute.pop(key, None)
         entry = self.catalog.get(key)
         if entry is None:
             return

@@ -44,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -146,6 +146,14 @@ class LiveEngine:
                  # the shared fair backlog centrally and hands ready
                  # fetches to dispatch_fetch(); step() must not race it
                  external_dispatch: bool = False,
+                 # streaming client view: called as on_token(req, token,
+                 # t) the moment each token exists — first token inside
+                 # prefill, then once per decode step.  ``t`` is the
+                 # engine clock (virtual under a bandwidth trace), so a
+                 # client callback sees the same TTFT/inter-token gaps
+                 # the metrics report
+                 on_token: Optional[Callable[[Request, int, float],
+                                             None]] = None,
                  # shard the paged cache over a jax device mesh
                  # (launch/mesh.py) and run per-shard fetch/decode/
                  # restore plans as independent flows through the one
@@ -193,6 +201,7 @@ class LiveEngine:
                                 and link_ramp is None), \
             "WAN options (async fetch, loss=, link_policy=, link_ramp=) " \
             "need a bandwidth trace (virtual clock)"
+        self.on_token = on_token
         self.cost = cost
         self.ctrl: Optional[FetchController] = None
         if isinstance(store, StorageCluster) and (loss is not None
@@ -244,7 +253,11 @@ class LiveEngine:
 
     # -- time: virtual clock in modeled-network mode, else wall clock -------
     def now(self) -> float:
-        return self._clock if self.virtual else time.monotonic()
+        # wall-clock mode is the integration-test default (fetches
+        # complete synchronously at dispatch); every replayed event log
+        # comes from virtual-clock mode, where this branch never runs
+        return self._clock if self.virtual \
+            else time.monotonic()  # repro-lint: allow(no-wall-clock)
 
     # -- mesh-sharded paged cache --------------------------------------------
     def _shard_cache(self, mesh) -> None:
@@ -500,6 +513,8 @@ class LiveEngine:
         req.tokens_out = 1
         req.t_first_token = self.now()
         req.token_times.append(req.t_first_token)
+        if self.on_token is not None:
+            self.on_token(req, nxt, req.t_first_token)
         if (req.storage_hit == "miss" and req.storage_miss_key
                 and isinstance(self.store, StorageCluster)):
             # delayed write-on-miss: only now does the recomputed KV
@@ -611,6 +626,8 @@ class LiveEngine:
                 self.outputs[req.rid].append(int(nxt[i]))
                 req.tokens_out += 1
                 req.token_times.append(tnow)
+                if self.on_token is not None:
+                    self.on_token(req, int(nxt[i]), tnow)
         for req in list(self.sched.running):
             if req.tokens_out >= req.max_new_tokens:
                 self.sched.finish(req, self.now())

@@ -558,5 +558,8 @@ def test_fairness_event_log_identical_in_simulator_and_live_engine(
     serves = [rid for _, rid, k, _ in fair_e.events if k == "serve"]
     assert sorted(serves) == list(range(len(script)))
     # the doomed prefixes really resolved as misses post-failure
-    missed = {rid for _, rid, k, _ in fair_e.events if k == "miss"}
+    # (sorted drain: repro-lint ordered-iteration bans set iteration
+    # in functions that touch the replay machinery)
+    missed = sorted({rid for _, rid, k, _ in fair_e.events
+                     if k == "miss"})
     assert missed and all(script[rid][0] == "mallory" for rid in missed)

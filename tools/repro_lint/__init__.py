@@ -1,0 +1,27 @@
+"""repro-lint: AST-based determinism linter for the replay contract.
+
+Every subsystem in this repo (WAN transport, storage churn, fairness,
+fleet routing) stakes its correctness on one invariant: the simulator
+and the live engine replay **byte-identical, timestamp-free event
+logs** from seeded inputs.  This package makes that invariant a
+build-time guarantee instead of a reviewer convention: a stdlib-only
+static analyzer with a pluggable rule registry, stable-ordered
+diagnostics, and inline suppression pragmas.
+
+Run it over the tree::
+
+    python -m tools.repro_lint src tests benchmarks tools
+
+Suppress a justified violation on its line (or the line above)::
+
+    t0 = time.time()  # repro-lint: allow(no-wall-clock) -- progress log
+
+The rule catalogue, the contract it enforces, and how to add a rule
+are documented in docs/determinism.md.
+"""
+from .engine import (Diagnostic, Project, Rule,  # noqa: F401
+                     RULES, register, run_paths)
+from . import rules  # noqa: F401  (importing registers the rule set)
+
+__all__ = ["Diagnostic", "Project", "Rule", "RULES", "register",
+           "run_paths"]

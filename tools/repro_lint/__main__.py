@@ -1,0 +1,59 @@
+"""CLI: ``python -m tools.repro_lint [paths...]``.
+
+Exits 0 when the tree is clean, 1 when any diagnostic survives
+suppression — CI runs it as a required job (see .github/workflows/
+ci.yml ``lint``), so a replay-contract violation fails the build with
+a ``path:line:col: rule: message`` pointing at the offending line.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import RULES, run_paths
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks", "tools"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.repro_lint",
+        description=("Determinism linter enforcing the replay contract "
+                     "(docs/determinism.md): simulator and live engine "
+                     "must replay byte-identical, timestamp-free event "
+                     "logs from seeded inputs."))
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files or directories to lint "
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
+    ap.add_argument("--root", default=None,
+                    help="directory diagnostics are reported relative "
+                         "to (default: cwd)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule names to run "
+                         "(default: all)")
+    ap.add_argument("--ignore", default="",
+                    help="comma-separated rule names to skip")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the registered rules and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(f"{name:24s} {RULES[name].summary}")
+        return 0
+
+    select = ([s.strip() for s in args.select.split(",") if s.strip()]
+              if args.select else None)
+    ignore = [s.strip() for s in args.ignore.split(",") if s.strip()]
+    diags = run_paths(args.paths or DEFAULT_PATHS, root=args.root,
+                      select=select, ignore=ignore)
+    for d in diags:
+        print(d)
+    n = len(diags)
+    print(f"repro-lint: {n} diagnostic{'s' if n != 1 else ''}"
+          + ("" if n else " — replay contract holds"))
+    return 1 if diags else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,223 @@
+"""repro-lint core: files, pragmas, diagnostics, and the rule registry.
+
+The engine is deliberately small and stdlib-only (``ast`` + ``re``):
+
+* :class:`SourceFile` parses one file once and pre-computes its
+  suppression pragmas (``# repro-lint: allow(<rule>[, <rule>...])``,
+  effective on the pragma's own line and the line directly below — so
+  a standalone comment line can annotate the statement it precedes).
+* :class:`Rule` subclasses implement ``check(file)`` for per-file AST
+  passes and/or ``finalize(project)`` for whole-tree passes (the
+  cross-environment parity rule needs to see several files at once).
+* :func:`run_paths` walks the requested paths, applies every selected
+  rule, filters suppressed diagnostics, and returns the rest in a
+  stable order — ``(path, line, col, rule, message)`` — so two runs
+  over the same tree always print byte-identical output (the linter
+  practices the determinism it preaches).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+PRAGMA = re.compile(r"#\s*repro-lint:\s*allow\(([\w\-, ]+)\)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    """One finding, anchored to a source line."""
+    path: str   # repo-relative, posix separators
+    line: int   # 1-based
+    col: int    # 0-based (ast convention)
+    rule: str
+    message: str
+
+    def sort_key(self):
+        return (self.path, self.line, self.col, self.rule, self.message)
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col + 1}: "
+                f"{self.rule}: {self.message}")
+
+
+class SourceFile:
+    """One parsed source file plus its pragma map."""
+
+    def __init__(self, abspath: str, relpath: str):
+        self.abspath = abspath
+        self.path = relpath.replace(os.sep, "/")
+        with open(abspath, "r", encoding="utf-8") as f:
+            self.text = f.read()
+        self.tree = ast.parse(self.text, filename=self.path)
+        # line -> rule names allowed there.  A pragma suppresses its own
+        # line and the line below, so both inline tail comments and
+        # standalone comment lines above a statement work.
+        self._allow: Dict[int, set] = {}
+        for i, line in enumerate(self.text.splitlines(), 1):
+            m = PRAGMA.search(line)
+            if m:
+                names = {n.strip() for n in m.group(1).split(",")
+                         if n.strip()}
+                self._allow.setdefault(i, set()).update(names)
+                self._allow.setdefault(i + 1, set()).update(names)
+
+    @property
+    def parts(self) -> tuple:
+        """Path segments (for rule scoping, e.g. ``"tests" in parts``)."""
+        return tuple(self.path.split("/"))
+
+    def suppressed(self, diag: Diagnostic) -> bool:
+        return diag.rule in self._allow.get(diag.line, ())
+
+    def diag(self, node: ast.AST, rule: str, message: str) -> Diagnostic:
+        return Diagnostic(self.path, getattr(node, "lineno", 1),
+                          getattr(node, "col_offset", 0), rule, message)
+
+
+class Project:
+    """Every file of one lint run (whole-tree context for finalize)."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+
+    def classes(self) -> Iterator[tuple]:
+        """Yield ``(file, ClassDef)`` for every top-level class."""
+        for f in self.files:
+            for node in f.tree.body:
+                if isinstance(node, ast.ClassDef):
+                    yield f, node
+
+
+class Rule:
+    """Base class: subclass, set ``name``/``summary``, register."""
+
+    name = ""
+    summary = ""
+
+    def check(self, f: SourceFile) -> Iterable[Diagnostic]:
+        return ()
+
+    def finalize(self, project: Project) -> Iterable[Diagnostic]:
+        return ()
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(cls):
+    """Class decorator adding a rule to the global registry."""
+    assert cls.name and cls.name not in RULES, \
+        f"rule name missing or duplicated: {cls.name!r}"
+    RULES[cls.name] = cls()
+    return cls
+
+
+# -- helpers shared by rules -------------------------------------------------
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def import_aliases(tree: ast.AST) -> Dict[str, str]:
+    """Local name -> fully qualified module/attribute, from imports.
+
+    ``import numpy as np`` -> ``{"np": "numpy"}``;
+    ``from time import perf_counter as pc`` ->
+    ``{"pc": "time.perf_counter"}``.  Star imports are ignored.
+    """
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0])
+        elif isinstance(node, ast.ImportFrom) and node.module \
+                and node.level == 0:
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+def resolve_call(node: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    """Fully-qualified dotted name of a call target, via the file's
+    import aliases (``np.random.rand`` -> ``numpy.random.rand``)."""
+    dn = dotted_name(node.func)
+    if dn is None:
+        return None
+    head, _, rest = dn.partition(".")
+    full = aliases.get(head, head)
+    return f"{full}.{rest}" if rest else full
+
+
+def walk_functions(tree: ast.AST) -> Iterator[ast.AST]:
+    """Every function/async-function definition, any nesting depth."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+# -- discovery + the run loop ------------------------------------------------
+
+def _iter_py_files(paths: Sequence[str], root: str) -> Iterator[tuple]:
+    for p in paths:
+        ap = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            yield ap, os.path.relpath(ap, root)
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d != "__pycache__"
+                                     and not d.startswith("."))
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        full = os.path.join(dirpath, fn)
+                        yield full, os.path.relpath(full, root)
+
+
+def run_paths(paths: Sequence[str], *, root: Optional[str] = None,
+              select: Optional[Sequence[str]] = None,
+              ignore: Sequence[str] = ()) -> List[Diagnostic]:
+    """Lint ``paths`` (files or directories) and return the surviving
+    diagnostics, stably ordered.  ``root`` anchors the relative paths
+    reported in diagnostics (default: cwd).  ``select``/``ignore``
+    filter the rule set by name."""
+    root = os.path.abspath(root or os.getcwd())
+    active = {n: r for n, r in RULES.items()
+              if (select is None or n in select) and n not in ignore}
+    unknown = set(select or ()) - set(RULES) | set(ignore) - set(RULES)
+    assert not unknown, f"unknown rule(s): {sorted(unknown)}"
+    files: List[SourceFile] = []
+    out: List[Diagnostic] = []
+    for abspath, relpath in _iter_py_files(paths, root):
+        try:
+            f = SourceFile(abspath, relpath)
+        except SyntaxError as e:
+            out.append(Diagnostic(relpath.replace(os.sep, "/"),
+                                  e.lineno or 1, 0, "parse-error", str(e)))
+            continue
+        files.append(f)
+        for rule in active.values():
+            for d in rule.check(f):
+                if not f.suppressed(d):
+                    out.append(d)
+    project = Project(files)
+    by_path = {f.path: f for f in files}
+    for rule in active.values():
+        for d in rule.finalize(project):
+            f = by_path.get(d.path)
+            if f is None or not f.suppressed(d):
+                out.append(d)
+    return sorted(set(out), key=Diagnostic.sort_key)

@@ -1,0 +1,414 @@
+"""The shipped rule set: six determinism invariants, mechanically checked.
+
+Each rule is a small AST pass grounded in one way cross-environment
+replay has broken (or nearly broken) in this repo.  The contract they
+enforce — and the reasoning behind each — is docs/determinism.md; the
+table there mirrors the ``summary`` strings below.
+
+Scoping conventions:
+
+* ``src/`` is replay-relevant production code: the wall-clock ban
+  applies there (``launch/``/``training/``/``serving/`` annotate their
+  legitimate timing sites with pragmas).
+* ``tests/``/``benchmarks/``/``tools/`` measure and report — wall
+  clocks are fine there, but unseeded RNG and direct ``hypothesis``
+  imports are not.
+* Dicts are insertion-ordered in every supported Python (>= 3.7) and
+  the event logs rely on that; **sets are not order-stable for str
+  keys across processes** (hash randomization), which is why
+  ``ordered-iteration`` bans set-typed replay state outright instead
+  of trying to prove a particular drain is sorted.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from .engine import (Diagnostic, Project, Rule, SourceFile, dotted_name,
+                     import_aliases, register, resolve_call,
+                     walk_functions)
+
+# -- no-wall-clock -----------------------------------------------------------
+
+WALL_CLOCK_CALLS = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.process_time_ns",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+
+@register
+class NoWallClock(Rule):
+    name = "no-wall-clock"
+    summary = ("wall-clock reads are banned in src/ (virtual clocks "
+               "only); annotate legitimate timing sites with a pragma")
+
+    def check(self, f: SourceFile) -> Iterator[Diagnostic]:
+        if "src" not in f.parts[:1]:
+            return
+        aliases = import_aliases(f.tree)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = resolve_call(node, aliases)
+            if target in WALL_CLOCK_CALLS:
+                yield f.diag(
+                    node, self.name,
+                    f"{target}() reads the wall clock; replayed state "
+                    f"must come from the virtual clock or seeded "
+                    f"inputs")
+
+
+# -- seeded-rng --------------------------------------------------------------
+
+# the legacy module-level numpy API draws from one hidden global state;
+# the repo threads explicit numpy.random.Generator objects instead
+LEGACY_NP_RANDOM = {
+    "seed", "random", "rand", "randn", "randint", "random_integers",
+    "random_sample", "ranf", "sample", "choice", "shuffle",
+    "permutation", "uniform", "normal", "standard_normal", "poisson",
+    "exponential", "binomial", "bytes", "get_state", "set_state",
+}
+
+
+@register
+class SeededRng(Rule):
+    name = "seeded-rng"
+    summary = ("global-state RNG (stdlib random, legacy numpy.random.*) "
+               "is banned; thread a seeded numpy.random.Generator")
+
+    def check(self, f: SourceFile) -> Iterator[Diagnostic]:
+        aliases = import_aliases(f.tree)
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "random" or a.name.startswith("random."):
+                        yield f.diag(
+                            node, self.name,
+                            "stdlib 'random' draws from hidden global "
+                            "state; use numpy.random.default_rng(seed)")
+            elif isinstance(node, ast.ImportFrom):
+                if node.level == 0 and node.module and \
+                        (node.module == "random"
+                         or node.module.startswith("random.")):
+                    yield f.diag(
+                        node, self.name,
+                        "stdlib 'random' draws from hidden global "
+                        "state; use numpy.random.default_rng(seed)")
+            elif isinstance(node, ast.Call):
+                target = resolve_call(node, aliases)
+                if target is None:
+                    continue
+                if target.startswith("numpy.random.") and \
+                        target.rsplit(".", 1)[1] in LEGACY_NP_RANDOM:
+                    yield f.diag(
+                        node, self.name,
+                        f"{target}() uses numpy's hidden global RNG "
+                        f"state; thread a seeded "
+                        f"numpy.random.Generator instead")
+
+
+# -- ordered-iteration -------------------------------------------------------
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("set", "frozenset")
+    return False
+
+
+def _is_set_annotation(node: Optional[ast.AST]) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    dn = dotted_name(node)
+    return dn is not None and dn.split(".")[-1] in ("Set", "FrozenSet",
+                                                    "set", "frozenset")
+
+
+def _appends_replay_log(fn: ast.AST) -> bool:
+    """Does this function append to a replay log?  Direct forms only:
+    ``<x>.events.append(...)``, ``push_event(...)``, ``<x>._emit(...)``
+    (the fairness log wrapper)."""
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        func = node.func
+        if isinstance(func, ast.Attribute):
+            if func.attr in ("push_event", "_emit"):
+                return True
+            if func.attr == "append" and \
+                    isinstance(func.value, ast.Attribute) and \
+                    func.value.attr == "events":
+                return True
+        elif isinstance(func, ast.Name) and \
+                func.id in ("push_event", "_emit"):
+            return True
+    return False
+
+
+def _class_has_event_log(cls: ast.ClassDef) -> bool:
+    """Does any method assign ``self.events``?"""
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if isinstance(t, ast.Attribute) and t.attr == "events" \
+                        and isinstance(t.value, ast.Name) \
+                        and t.value.id == "self":
+                    return True
+    return False
+
+
+@register
+class OrderedIteration(Rule):
+    name = "ordered-iteration"
+    summary = ("set iteration and set-typed state are banned near "
+               "replay logs (str hashing is per-process random); use "
+               "an insertion-ordered dict or sorted() the drain")
+
+    def check(self, f: SourceFile) -> Iterator[Diagnostic]:
+        # (a) iterating a set inside a function that appends to a
+        # replay log: the loop body's emission order leaks hash order
+        for fn in walk_functions(f.tree):
+            if not _appends_replay_log(fn):
+                continue
+            set_names = self._local_set_names(fn)
+            for loop_iter in self._iteration_sites(fn):
+                if self._is_unordered(loop_iter, set_names):
+                    yield f.diag(
+                        loop_iter, self.name,
+                        "iterating a set inside a function that "
+                        "appends to a replay event log: emission "
+                        "order follows per-process hash order; drain "
+                        "through sorted(...) or keep an "
+                        "insertion-ordered dict")
+        # (b) set-typed attribute state in a class that owns a replay
+        # log: any future drain of that attribute is a replay hazard,
+        # so the state itself is banned (Dict[key, None] is the
+        # insertion-ordered replacement)
+        for node in f.tree.body:
+            if not isinstance(node, ast.ClassDef) or \
+                    not _class_has_event_log(node):
+                continue
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.AnnAssign) and \
+                        isinstance(sub.target, ast.Attribute) and \
+                        isinstance(sub.target.value, ast.Name) and \
+                        sub.target.value.id == "self" and \
+                        (_is_set_annotation(sub.annotation)
+                         or (sub.value is not None
+                             and _is_set_expr(sub.value))):
+                    yield self._state_diag(f, sub, sub.target.attr)
+                elif isinstance(sub, ast.Assign) and sub.value is not None \
+                        and _is_set_expr(sub.value):
+                    for t in sub.targets:
+                        if isinstance(t, ast.Attribute) and \
+                                isinstance(t.value, ast.Name) and \
+                                t.value.id == "self":
+                            yield self._state_diag(f, sub, t.attr)
+
+    def _state_diag(self, f: SourceFile, node: ast.AST,
+                    attr: str) -> Diagnostic:
+        return f.diag(
+            node, self.name,
+            f"self.{attr} is set-typed state in a class that owns a "
+            f"replay event log; any drain replays in per-process hash "
+            f"order — use an insertion-ordered Dict[key, None]")
+
+    @staticmethod
+    def _local_set_names(fn: ast.AST) -> Set[str]:
+        names: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and _is_set_expr(node.value):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        names.add(t.id)
+            elif isinstance(node, ast.AnnAssign) and \
+                    isinstance(node.target, ast.Name) and \
+                    (_is_set_annotation(node.annotation)
+                     or (node.value is not None
+                         and _is_set_expr(node.value))):
+                names.add(node.target.id)
+        return names
+
+    @staticmethod
+    def _iteration_sites(fn: ast.AST) -> Iterator[ast.AST]:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.For):
+                yield node.iter
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.GeneratorExp, ast.DictComp)):
+                for gen in node.generators:
+                    yield gen.iter
+
+    @staticmethod
+    def _is_unordered(node: ast.AST, set_names: Set[str]) -> bool:
+        if _is_set_expr(node):
+            return True
+        if isinstance(node, ast.Name) and node.id in set_names:
+            return True
+        return False
+
+
+# -- timestamp-free-events ---------------------------------------------------
+
+CLOCK_NAMES = {"now", "t0", "t1", "tnow", "wall", "clock"}
+CLOCK_ATTRS = {"now", "_clock", "arrival", "t_first_token"}
+
+
+@register
+class TimestampFreeEvents(Rule):
+    name = "timestamp-free-events"
+    summary = ("tuples appended to replay event logs must not embed "
+               "clock values (now, self._clock, time.*)")
+
+    def check(self, f: SourceFile) -> Iterator[Diagnostic]:
+        aliases = import_aliases(f.tree)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            if not (isinstance(func, ast.Attribute)
+                    and func.attr == "append"
+                    and isinstance(func.value, ast.Attribute)
+                    and func.value.attr == "events"):
+                continue
+            for arg in node.args:
+                leak = self._clock_leak(arg, aliases)
+                if leak:
+                    yield f.diag(
+                        node, self.name,
+                        f"event appended to a replay log embeds the "
+                        f"clock value {leak!r}; logs must be "
+                        f"timestamp-free so both environments replay "
+                        f"byte-identically")
+
+    @staticmethod
+    def _clock_leak(arg: ast.AST,
+                    aliases: Dict[str, str]) -> Optional[str]:
+        for sub in ast.walk(arg):
+            if isinstance(sub, ast.Name) and sub.id in CLOCK_NAMES:
+                return sub.id
+            if isinstance(sub, ast.Attribute) and \
+                    sub.attr in CLOCK_ATTRS:
+                return dotted_name(sub) or sub.attr
+            if isinstance(sub, ast.Call):
+                target = resolve_call(sub, aliases)
+                if target in WALL_CLOCK_CALLS:
+                    return target
+        return None
+
+
+# -- hypothesis-via-shim -----------------------------------------------------
+
+@register
+class HypothesisViaShim(Rule):
+    name = "hypothesis-via-shim"
+    summary = ("tests import the offline seeded shim "
+               "(tests/_hypothesis_compat), never hypothesis directly")
+
+    def check(self, f: SourceFile) -> Iterator[Diagnostic]:
+        if "tests" not in f.parts or \
+                f.parts[-1] == "_hypothesis_compat.py":
+            return
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "hypothesis" or \
+                            a.name.startswith("hypothesis."):
+                        yield self._diag(f, node)
+            elif isinstance(node, ast.ImportFrom) and node.level == 0 \
+                    and node.module and \
+                    (node.module == "hypothesis"
+                     or node.module.startswith("hypothesis.")):
+                yield self._diag(f, node)
+
+    def _diag(self, f: SourceFile, node: ast.AST) -> Diagnostic:
+        return f.diag(
+            node, self.name,
+            "import property-test helpers from _hypothesis_compat "
+            "(offline seeded replay shim), not hypothesis directly — "
+            "tier-1 must collect and pass without the package")
+
+
+# -- cross-env-parity --------------------------------------------------------
+
+# (simulator class, counterpart classes): every replay-relevant
+# keyword-only knob on the simulator must exist on the counterpart —
+# same name, a known alias, or a pragma naming why it is env-only
+PARITY_PAIRS: List[Tuple[str, Tuple[str, ...]]] = [
+    ("ServingSimulator", ("LiveEngine",)),
+    ("FleetSimulator", ("LiveFleet",)),
+]
+# param-name aliases between the environments (the storage tier is the
+# `store`/`cluster` positional in the live classes; the decode table is
+# `decode_table` on the engine)
+PARITY_ALIASES: Dict[str, Tuple[str, ...]] = {
+    "storage": ("store", "cluster"),
+    "table": ("decode_table",),
+}
+
+
+def _init_args(cls: ast.ClassDef) -> Optional[ast.arguments]:
+    for node in cls.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name == "__init__":
+            return node.args
+    return None
+
+
+def _all_param_names(args: ast.arguments) -> Set[str]:
+    names = {a.arg for a in (args.posonlyargs + args.args
+                             + args.kwonlyargs)}
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    names.discard("self")
+    return names
+
+
+@register
+class CrossEnvParity(Rule):
+    name = "cross-env-parity"
+    summary = ("every keyword-only knob on a simulator __init__ needs "
+               "a counterpart on its live-environment class (or a "
+               "pragma naming why it is simulator-only)")
+
+    def finalize(self, project: Project) -> Iterator[Diagnostic]:
+        index: Dict[str, List[Tuple[SourceFile, ast.ClassDef]]] = {}
+        for f, cls in project.classes():
+            index.setdefault(cls.name, []).append((f, cls))
+        for sim_name, live_names in PARITY_PAIRS:
+            for f, sim_cls in index.get(sim_name, []):
+                sim_args = _init_args(sim_cls)
+                if sim_args is None:
+                    continue
+                for live_name in live_names:
+                    for _, live_cls in index.get(live_name, []):
+                        live_args = _init_args(live_cls)
+                        if live_args is None:
+                            continue
+                        yield from self._compare(
+                            f, sim_name, sim_args, live_name,
+                            _all_param_names(live_args))
+
+    def _compare(self, f: SourceFile, sim_name: str,
+                 sim_args: ast.arguments, live_name: str,
+                 live_params: Set[str]) -> Iterator[Diagnostic]:
+        for a in sim_args.kwonlyargs:
+            candidates = (a.arg,) + PARITY_ALIASES.get(a.arg, ())
+            if any(c in live_params for c in candidates):
+                continue
+            yield f.diag(
+                a, self.name,
+                f"{sim_name} keyword {a.arg!r} has no counterpart on "
+                f"{live_name}: a replay-relevant knob reachable in "
+                f"only one environment lets the two drift apart "
+                f"silently")
